@@ -1,0 +1,42 @@
+"""Fig 8: reuse/parallelism metrics (eqs 6-9) across array sizes."""
+from repro.core.folds import PEArray, decompose
+from repro.core.loopnest import synthetic_suite
+from repro.core.perfmodel import reuse_metrics
+
+
+def rows():
+    out = []
+    for pe in (16, 32, 64):
+        for cv in synthetic_suite():
+            m = reuse_metrics(decompose(cv, PEArray(pe, pe)))
+            out.append({
+                "workload": str(cv), "pe": f"{pe}x{pe}",
+                "temporal_weight_reuse": m.temporal_weight_reuse,
+                "spatial_input_reuse": m.spatial_input_reuse,
+                "spatial_parallelism": m.spatial_parallelism,
+                "spatial_reduction": m.spatial_reduction,
+            })
+    return out
+
+
+def main(csv=False):
+    print("# Fig 8 — reuse trends (eqs 6-9)")
+    hdr = ("workload", "pe", "temporal_weight_reuse", "spatial_input_reuse",
+           "spatial_parallelism", "spatial_reduction")
+    print(",".join(hdr))
+    for r in rows():
+        print(",".join(str(r[h]) for h in hdr))
+    # trend check: every metric grows monotonically with the array
+    by_wl = {}
+    for r in rows():
+        by_wl.setdefault(r["workload"], []).append(r)
+    mono = all(
+        a[k] <= b[k] <= c[k]
+        for wl, (a, b, c) in by_wl.items()
+        for k in hdr[2:])
+    print(f"# monotone growth with array size (paper Fig 8): {mono}")
+    return mono
+
+
+if __name__ == "__main__":
+    main()

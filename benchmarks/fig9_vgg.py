@@ -1,0 +1,34 @@
+"""Fig 9: layer-wise VGG-16 utilization and clock cycles per array size."""
+from repro.core.folds import PEArray, decompose
+from repro.core.loopnest import vgg16_conv_layers
+from repro.core.perfmodel import t_ops_cycles
+
+
+def rows():
+    out = []
+    for name, cv in vgg16_conv_layers():
+        row = {"layer": name}
+        for pe in (16, 32, 64):
+            plan = decompose(cv, PEArray(pe, pe))
+            row[f"util_{pe}"] = round(plan.avg_utilization(), 2)
+            row[f"cycles_{pe}_M"] = round(t_ops_cycles(plan) / 1e6, 3)
+        out.append(row)
+    return out
+
+
+def main(csv=False):
+    print("# Fig 9 — VGG-16 layer-wise utilization (a) and cycles (b)")
+    hdr = ("layer", "util_16", "util_32", "util_64",
+           "cycles_16_M", "cycles_32_M", "cycles_64_M")
+    print(",".join(hdr))
+    for r in rows():
+        print(",".join(str(r[h]) for h in hdr))
+    late = [r for r in rows() if not r["layer"].startswith("conv1_1")]
+    u64_min = min(r["util_64"] for r in late)
+    print(f"# 64x64 utilization >90% on all layers past conv1_1: "
+          f"{u64_min > 90} (min {u64_min}%)")
+    return u64_min
+
+
+if __name__ == "__main__":
+    main()

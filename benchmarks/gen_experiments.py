@@ -1,0 +1,80 @@
+"""Regenerate the data tables of EXPERIMENTS.md from dry-run JSONs.
+
+Writes markdown tables to benchmarks/results/tables/*.md; EXPERIMENTS.md
+includes them verbatim (kept in sync by re-running this script).
+"""
+import glob
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent
+RESULTS = ROOT / "results" / "dryrun"
+OUT = ROOT / "results" / "tables"
+
+
+def _rows(dirpath, mesh):
+    rows = []
+    for f in sorted(glob.glob(str(dirpath / f"*__{mesh}.json"))):
+        rows.append(json.loads(Path(f).read_text()))
+    return rows
+
+
+def roofline_table(mesh="16x16", dirpath=RESULTS):
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+        "| useful | roofline frac | mem GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in _rows(dirpath, mesh):
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP (full-attn, sub-quadratic required) | — | — | — |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]["total_per_device"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.3g} | "
+            f"{rf['t_memory_s']:.3g} | {rf['t_collective_s']:.3g} | "
+            f"**{rf['dominant']}** | {rf['useful_flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.4f} | {mem:.1f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh="2x16x16"):
+    lines = [
+        "| arch | shape | status | compile (s) | flops/dev | HBM bytes/dev "
+        "| coll wire bytes/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in _rows(RESULTS, mesh):
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | — | — | — "
+                         f"| — | — |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+            continue
+        rf = r["roofline"]
+        cc = rf["collectives"]["count"]
+        cstr = " ".join(f"{k}:{int(v)}" for k, v in sorted(cc.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | OK | {r['compile_s']:.1f} | "
+            f"{rf['flops_per_dev']:.3g} | {rf['bytes_per_dev']:.3g} | "
+            f"{rf['coll_wire_bytes_per_dev']:.3g} | {cstr} |")
+    return "\n".join(lines)
+
+
+def main():
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "roofline_16x16.md").write_text(roofline_table("16x16"))
+    (OUT / "roofline_2x16x16.md").write_text(roofline_table("2x16x16"))
+    (OUT / "dryrun_2x16x16.md").write_text(dryrun_table("2x16x16"))
+    (OUT / "dryrun_16x16.md").write_text(dryrun_table("16x16"))
+    print("tables written to", OUT)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (EXPERIMENTS.md)."""
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(mesh="16x16"):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{mesh}.json"))):
+        r = json.loads(Path(f).read_text())
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    if r.get("skipped"):
+        return (f"{r['arch']},{r['shape']},{r['mesh']},SKIP,,,,,,,"
+                f"\"{r.get('reason', '')[:60]}\"")
+    if not r.get("ok"):
+        return f"{r['arch']},{r['shape']},{r['mesh']},FAIL,,,,,,,"
+    rf = r["roofline"]
+    mem = r["memory"]["total_per_device"] / 2**30
+    return (f"{r['arch']},{r['shape']},{r['mesh']},OK,"
+            f"{rf['t_compute_s']:.3e},{rf['t_memory_s']:.3e},"
+            f"{rf['t_collective_s']:.3e},{rf['dominant']},"
+            f"{rf['useful_flops_ratio']:.3f},{rf['roofline_fraction']:.4f},"
+            f"{mem:.2f}")
+
+
+def main(csv=False, mesh="16x16"):
+    print(f"# Roofline — per (arch x shape), {mesh} mesh "
+          f"(terms in seconds; TPU v5e constants)")
+    print("arch,shape,mesh,status,t_compute,t_memory,t_collective,"
+          "dominant,useful_flops_ratio,roofline_fraction,mem_GiB_per_dev")
+    rows = load(mesh)
+    for r in rows:
+        print(fmt_row(r))
+    ok = [r for r in rows if r.get("ok") and not r.get("skipped")]
+    dom = {}
+    for r in ok:
+        d = r["roofline"]["dominant"]
+        dom[d] = dom.get(d, 0) + 1
+    print(f"# {len(ok)} compiled cells; dominant-term histogram: {dom}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(mesh=sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,33 @@
+"""Benchmark aggregator: one section per paper table/figure + the roofline
+report from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig7_scaling, fig8_reuse, fig9_vgg, kernel_bench,
+                            kips, roofline_report, table3_folds)
+    sections = [
+        ("table3_folds", table3_folds.main),
+        ("fig7_scaling", fig7_scaling.main),
+        ("fig8_reuse", fig8_reuse.main),
+        ("fig9_vgg", fig9_vgg.main),
+        ("kips", kips.main),
+        ("kernel_bench", kernel_bench.main),
+        ("roofline_16x16", lambda: roofline_report.main(mesh="16x16")),
+        ("roofline_2x16x16", lambda: roofline_report.main(mesh="2x16x16")),
+    ]
+    for name, fn in sections:
+        t0 = time.perf_counter()
+        print(f"\n===== {name} =====")
+        try:
+            fn()
+        except Exception as e:  # keep the suite running
+            print(f"# {name} ERROR: {type(e).__name__}: {e}")
+        print(f"# [{name}: {time.perf_counter()-t0:.2f}s]")
+
+
+if __name__ == "__main__":
+    main()

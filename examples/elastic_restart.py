@@ -1,0 +1,78 @@
+"""Fault-tolerance demo: heartbeat failure detection -> elastic re-mesh ->
+restart from checkpoint with identical training trajectory.
+
+Simulates the 1000-node operational loop on one process:
+  1. train with checkpoints;
+  2. a worker goes silent (heartbeat timeout) mid-run -> declared dead;
+  3. the elastic planner re-solves the mesh for the surviving devices,
+     preserving TP degree and the exact global batch (dp x per_dev x accum);
+  4. a fresh trainer restores the last committed checkpoint and finishes.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+import tempfile
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig
+from repro.ft.fault_tolerance import (HeartbeatMonitor, StragglerDetector,
+                                      solve_elastic_mesh)
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = get_config("qwen3-4b", reduced=True)
+    ckpt = tempfile.mkdtemp(prefix="repro_elastic_")
+    data = DataConfig(vocab=cfg.vocab, seq_len=48, global_batch=8)
+    opt = AdamWConfig(lr=1e-3)
+
+    # --- phase 1: run to step 30 with checkpoints every 10 ---------------
+    t1 = Trainer(cfg, TrainerConfig(total_steps=30, ckpt_dir=ckpt,
+                                    ckpt_every=10, log_every=10),
+                 opt_cfg=opt, data_cfg=data)
+    t1.run()
+
+    # --- phase 2: control-plane: a rank goes silent -----------------------
+    clock = [0.0]
+    mon = HeartbeatMonitor(n_ranks=512, timeout_s=60.0,
+                           clock=lambda: clock[0])
+    for r in range(512):
+        mon.beat(r, step=30)
+    clock[0] = 90.0
+    for r in range(512):
+        if r != 217:                       # rank 217 died
+            mon.beat(r, step=31)
+    clock[0] = 140.0                       # 50 s since live beats, 140 s
+    dead = mon.dead_ranks()                # since rank 217's last beat
+    print(f"heartbeat monitor: dead ranks = {dead}")
+    assert dead == [217]
+
+    # --- phase 3: elastic re-plan for the survivors -----------------------
+    # losing rank 217 takes its host's 4 chips: 512 -> 508 available
+    plan = solve_elastic_mesh(available_devices=508, model_parallel=16,
+                              global_batch=256)
+    print(f"elastic plan: mesh {plan.mesh_shape} ({plan.devices_used} of "
+          f"508 devices, {plan.dropped_devices} idle), "
+          f"per-device batch {plan.per_device_batch} x accum "
+          f"{plan.grad_accum}")
+    assert plan.mesh_shape[1] == 16                      # TP preserved
+    assert (plan.mesh_shape[0] * plan.per_device_batch
+            * plan.grad_accum) == 256                    # batch preserved
+
+    # --- phase 4: restart from the checkpoint and finish ------------------
+    t2 = Trainer(cfg, TrainerConfig(total_steps=60, ckpt_dir=ckpt,
+                                    ckpt_every=30, log_every=10),
+                 opt_cfg=opt, data_cfg=data)
+    params, _ = t2.run()
+    first = t1.history[0]["loss"]
+    last = t2.history[-1]["loss"]
+    shutil.rmtree(ckpt, ignore_errors=True)
+    print(f"\nloss {first:.3f} -> {last:.3f} across failure + re-mesh + "
+          f"restart")
+    assert last < first
+    print("OK: survived the failure with exact data-cursor resume")
+
+
+if __name__ == "__main__":
+    main()

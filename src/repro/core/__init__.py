@@ -1,0 +1,21 @@
+# The paper's primary contribution: the 7-D convolution loop-nest
+# decomposition (Filter Folds / Image Blocks / Image Folds), the
+# Spatial/Temporal-Map directive algebra, the analytical performance model
+# (eqs 1-15) and the message-driven fold simulator.
+from repro.core.loopnest import (AttnLoopNest, ConvLoopNest, GemmLoopNest,
+                                 synthetic_suite, vgg16_conv_layers)
+from repro.core.folds import FoldingPlan, PEArray, decompose
+from repro.core.mapping import (ConvBlockPlan, MappingPlan, SpatialMap,
+                                TemporalMap, plan_conv_blocks)
+from repro.core.perfmodel import (LayerPerf, MavecConfig, kips, layer_perf,
+                                  reuse_metrics, t_ops_cycles)
+from repro.core.simulator import execute_conv_by_folds, simulate_cycles
+
+__all__ = [
+    "AttnLoopNest", "ConvLoopNest", "GemmLoopNest", "synthetic_suite",
+    "vgg16_conv_layers", "FoldingPlan", "PEArray", "decompose",
+    "ConvBlockPlan", "MappingPlan", "SpatialMap", "TemporalMap",
+    "plan_conv_blocks", "LayerPerf", "MavecConfig", "kips", "layer_perf",
+    "reuse_metrics", "t_ops_cycles", "execute_conv_by_folds",
+    "simulate_cycles",
+]

@@ -1,0 +1,201 @@
+"""Spatial-Map / Temporal-Map directive algebra (paper Fig 6b) and its
+binding to TPU constructs.
+
+The paper expresses its dataflow with two data-centric directives:
+
+  Spatial Map (tile, tile) dim   -- distribute a loop dim across hardware
+  Temporal Map (1, 1) dim        -- serialize a loop dim in time
+
+On TPU these become, respectively:
+
+  * across chips  : a mesh axis in a ``PartitionSpec`` (GSPMD/pjit)
+  * within a chip : a Pallas grid dimension with a ``BlockSpec`` index-map
+    (spatial over the MXU lanes, temporal over the grid's streaming dims)
+
+``MappingPlan`` carries a set of directives for a named loop nest and can
+emit either form.  The LM framework's sharding rules
+(``repro/distributed/sharding.py``) are built from the same algebra, which is
+how the paper's conv-mapping discipline generalizes to the assigned
+transformer architectures (GEMM = 3-D nest, attention = 5-D nest).
+
+``plan_conv_blocks`` solves the fold-geometry equations (1)-(2) with the
+TPU's constraints (MXU tile 128, VMEM capacity) instead of MAVeC's
+(R_P, C_P): the filter fold becomes the weight block resident in VMEM, the
+image folds become the streamed input blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from jax.sharding import PartitionSpec
+
+from repro.core.loopnest import ConvLoopNest
+
+__all__ = [
+    "SpatialMap",
+    "TemporalMap",
+    "MappingPlan",
+    "ConvBlockPlan",
+    "plan_conv_blocks",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialMap:
+    """Distribute ``dim`` across the hardware axis ``axis``."""
+    dim: str
+    axis: str            # mesh axis name ("data", "model", "pod") or "mxu"
+
+    def __str__(self) -> str:
+        return f"SpatialMap({self.dim} -> {self.axis})"
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalMap:
+    """Serialize ``dim`` in time (streaming order = declaration order)."""
+    dim: str
+    tile: int = 1        # streaming tile size along the dim
+
+    def __str__(self) -> str:
+        return f"TemporalMap({self.dim}, tile={self.tile})"
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingPlan:
+    """A complete binding of a loop nest's dims to space and time."""
+    name: str
+    dims: Dict[str, int]                      # loop extents
+    directives: Tuple[object, ...]            # Spatial/Temporal maps, ordered
+
+    def spatial(self) -> List[SpatialMap]:
+        return [d for d in self.directives if isinstance(d, SpatialMap)]
+
+    def temporal(self) -> List[TemporalMap]:
+        return [d for d in self.directives if isinstance(d, TemporalMap)]
+
+    def validate(self) -> None:
+        seen = set()
+        for d in self.directives:
+            if d.dim not in self.dims:
+                raise ValueError(f"{d}: unknown dim (have {list(self.dims)})")
+            if d.dim in seen:
+                raise ValueError(f"{d}: dim bound twice")
+            seen.add(d.dim)
+
+    def partition_spec(self, tensor_dims: Sequence[Optional[str]]
+                       ) -> PartitionSpec:
+        """Emit a PartitionSpec for a tensor whose axes are named by loop
+        dims (None = not a loop dim / replicated)."""
+        by_dim = {d.dim: d.axis for d in self.spatial() if d.axis != "mxu"}
+        return PartitionSpec(*[by_dim.get(d) if d else None
+                               for d in tensor_dims])
+
+    def grid(self) -> Tuple[int, ...]:
+        """Pallas grid extents for the temporal dims, in order."""
+        return tuple(math.ceil(self.dims[t.dim] / t.tile)
+                     for t in self.temporal())
+
+    def __str__(self) -> str:
+        body = "; ".join(str(d) for d in self.directives)
+        return f"MappingPlan[{self.name}]({body})"
+
+
+# --------------------------------------------------------------------------
+# Conv block-shape solver for the Pallas kernel (TPU fold geometry)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvBlockPlan:
+    """Block shapes for the weight-stationary Pallas conv kernel.
+
+    weight block (nf_b, c_b*r*s) stays resident in VMEM across the image
+    stream (the Filter Fold); image blocks (c_b, rows, y) stream through
+    (the Image Folds); partial sums accumulate in VMEM across the c grid
+    dim (the reserved-column reduction, done by the accumulator instead of
+    dedicated PE columns -- TPU adaptation, see DESIGN.md §3).
+    """
+    nf_block: int        # filters per fold  (R_P analogue; MXU-lane aligned)
+    c_block: int         # channels per fold (eq (2) analogue)
+    p_block: int         # output rows computed per grid step
+    grid: Tuple[int, int, int]           # (nf folds, c folds, p folds)
+    vmem_bytes: int      # estimated working set
+
+    @property
+    def total_folds(self) -> int:
+        return self.grid[0] * self.grid[1] * self.grid[2]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def plan_conv_blocks(conv: ConvLoopNest,
+                     vmem_limit: int = 64 * 1024 * 1024,
+                     mxu: int = 128,
+                     bytes_per_elem: int = 4) -> ConvBlockPlan:
+    """Solve eqs (1)-(2) under TPU constraints.
+
+    R_P -> nf_block: min(N_F, 2*mxu) rounded to the MXU lane width so the
+           filter dim fills the systolic array.
+    C_P -> c_block:  largest channel count whose weight fold + streamed
+           image tile + accumulator fit in ~half of VMEM (the other half is
+           the Pallas double-buffer).
+    """
+    nf_block = min(_round_up(conv.nf, 8), 2 * mxu)
+    p_block = min(conv.p, max(1, 512 // max(conv.q, 1)))  # ~512 out positions
+
+    def working_set(c_b: int) -> int:
+        w = nf_block * c_b * conv.r * conv.s
+        img = c_b * (p_block * conv.stride + conv.r) * conv.padded_y
+        acc = nf_block * p_block * conv.q
+        return (w + img + acc) * bytes_per_elem
+
+    c_block = min(conv.c, 512)
+    while c_block > 1 and working_set(c_block) > vmem_limit // 2:
+        c_block //= 2
+    grid = (math.ceil(conv.nf / nf_block),
+            math.ceil(conv.c / c_block),
+            math.ceil(conv.p / p_block))
+    return ConvBlockPlan(nf_block=nf_block, c_block=c_block, p_block=p_block,
+                         grid=grid, vmem_bytes=working_set(c_block))
+
+
+# --------------------------------------------------------------------------
+# Canonical plans (Fig 6) -- used by docs/tests and the distributed layer
+# --------------------------------------------------------------------------
+
+def weight_stationary_conv_plan(conv: ConvLoopNest) -> MappingPlan:
+    """Fig 6(b): FF spatial, IF/IB temporal, PS reduced."""
+    plan = MappingPlan(
+        name=f"ws-conv[{conv}]",
+        dims=conv.dims(),
+        directives=(
+            SpatialMap("N_F", "mxu"),       # filters across PE rows
+            SpatialMap("R", "mxu"),         # flattened filter cols
+            SpatialMap("S", "mxu"),
+            TemporalMap("C", 1),            # image blocks (depth)
+            TemporalMap("N", 1),            # image folds
+            TemporalMap("P", 1),
+            TemporalMap("Q", 1),            # shift cycles
+        ),
+    )
+    plan.validate()
+    return plan
+
+
+def lm_train_plan(batch: int, seq: int, d_model: int) -> MappingPlan:
+    """The directive set behind the LM sharding rules: batch spatial on
+    data (and pod), model dims spatial on model, sequence temporal."""
+    plan = MappingPlan(
+        name="lm-train",
+        dims={"B": batch, "T": seq, "D": d_model},
+        directives=(
+            SpatialMap("B", "data"),
+            SpatialMap("D", "model"),
+            TemporalMap("T", seq),
+        ),
+    )
+    plan.validate()
+    return plan

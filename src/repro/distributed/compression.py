@@ -1,0 +1,75 @@
+"""Gradient compression for the DP all-reduce (int8 with error feedback).
+
+At 1000+ nodes the DP gradient reduction crosses the slow (DCN / pod) links;
+int8 quantization cuts those bytes 4x vs fp32 (2x vs bf16).  We use
+per-tensor symmetric scaling; the optional error-feedback residual makes the
+compression unbiased over time (Seide et al.; 1-bit Adam lineage).
+
+``int8_roundtrip`` is the jit-safe building block used inside the train
+step: quantize -> dequantize around the (XLA-inserted) all-reduce, so the
+reduction happens on values representable in int8.  On a real deployment the
+quantized payload itself would cross the wire via a shard_map custom
+all-reduce (``compressed_psum``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "int8_roundtrip",
+           "compressed_psum", "ErrorFeedback"]
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32))) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def int8_roundtrip(tree: Any) -> Any:
+    def one(x):
+        q, s = quantize_int8(x)
+        return dequantize_int8(q, s, x.dtype)
+    return jax.tree.map(one, tree)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """shard_map building block: int8-quantize, psum, dequantize.
+
+    The psum of int8 payloads is computed in int32 to avoid overflow across
+    up to 2^23 summands; scales are max-combined (conservative)."""
+    q, s = quantize_int8(x)
+    acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    smax = jax.lax.pmax(s, axis_name)
+    return (acc.astype(jnp.float32) * smax).astype(x.dtype)
+
+
+class ErrorFeedback:
+    """Residual accumulator: g_hat = Q(g + e); e <- (g + e) - g_hat."""
+
+    @staticmethod
+    def init(tree: Any) -> Any:
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+    @staticmethod
+    def apply(tree: Any, residual: Any) -> Tuple[Any, Any]:
+        def one(g, e):
+            tot = g.astype(jnp.float32) + e
+            q, s = quantize_int8(tot)
+            deq = dequantize_int8(q, s)
+            return deq.astype(g.dtype), tot - deq
+        pairs = jax.tree.map(one, tree, residual)
+        ghat = jax.tree.map(lambda p: p[0], pairs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        res = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return ghat, res

@@ -1,0 +1,140 @@
+"""Logical-axis sharding rules: the paper's Spatial-Map directives bound to
+mesh axes (DESIGN.md §5).
+
+Every model parameter/activation declares *logical* axis names
+(``models/common.Axes``); this module maps them onto the physical mesh:
+
+  Spatial Map(batch  -> pod, data)     — DP (the image-fold streaming axis)
+  Spatial Map(heads/mlp/vocab/experts -> model) — TP/EP (the filter-fold
+                                          stationary axis: weights never move)
+  Temporal Map(seq)                    — streamed in time, unsharded
+                                          (sequence-sharded variants opt-in)
+
+``constrain`` applies activation sharding constraints only when a
+(mesh, rules) context has been installed by a launcher — model code stays
+runnable on a single CPU device with zero mesh machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.common import Axes
+
+__all__ = ["ShardingRules", "make_rules", "spec_for", "tree_shardings",
+           "set_context", "clear_context", "constrain", "zero1_shardings"]
+
+MeshAxes = Optional[Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of axes, or None)."""
+    table: Dict[str, Any]
+    seq_shard_kv: bool = False   # long-context decode: shard cache seq on dp
+
+    def get(self, name: Optional[str]):
+        if name is None:
+            return None
+        return self.table.get(name)
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(cfg, mesh: Mesh, *, seq_shard_kv: bool = False,
+               shard_batch: bool = True) -> ShardingRules:
+    """Derive the rule table from config divisibilities and mesh geometry."""
+    model = mesh.shape.get("model", 1)
+    dp = _dp_axes(mesh)
+    # head params are padded to head_pad_multiple for even TP (qwen2.5:
+    # 40 -> 48); divisibility must be checked on the PADDED count
+    heads_ok = cfg.padded_heads % model == 0
+    kv_ok = cfg.kv_heads % model == 0
+    d_in = cfg.ssm_expand * cfg.d_model
+    table = {
+        Axes.BATCH: dp if shard_batch else None,
+        Axes.VOCAB: "model",
+        Axes.HEADS: "model" if heads_ok else None,
+        Axes.KV_HEADS: "model" if kv_ok else None,   # else replicated (GQA)
+        Axes.MLP: "model",
+        Axes.EXPERTS: "model",
+        Axes.EXPERT_MLP: None,
+        Axes.EMBED: None,
+        Axes.SSM_INNER: "model" if d_in % model == 0 else None,
+        Axes.STATE: None,
+        Axes.CONV_K: None,
+        Axes.HEAD_DIM: None,
+        Axes.LAYERS: None,
+        Axes.SEQ: None,
+        "seq_kv": dp if seq_shard_kv else None,
+        "cache_kv": "model" if cfg.cache_kv_heads % model == 0 else None,
+    }
+    return ShardingRules(table=table, seq_shard_kv=seq_shard_kv)
+
+
+def spec_for(axes: Sequence[Optional[str]], rules: ShardingRules
+             ) -> PartitionSpec:
+    return PartitionSpec(*[rules.get(a) for a in axes])
+
+
+def tree_shardings(axes_tree, rules: ShardingRules, mesh: Mesh):
+    """Map an axes tree (tuples of logical names) to NamedShardings."""
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, spec_for(a, rules)),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer-state sharding over the data axes
+# ---------------------------------------------------------------------------
+
+def zero1_shardings(axes_tree, shapes_tree, rules: ShardingRules, mesh: Mesh):
+    """Optimizer moments/master: param sharding + the DP axes folded onto the
+    first dimension that is unsharded and divisible (classic ZeRO-1)."""
+    dp = _dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def one(axes, shape):
+        spec = list(spec_for(axes, rules))
+        if dp and dp_size > 1:
+            for i, (s, dim) in enumerate(zip(spec, shape)):
+                if s is None and dim % dp_size == 0 and dim > 0:
+                    spec[i] = dp
+                    break
+        return NamedSharding(mesh, PartitionSpec(*spec))
+
+    return jax.tree.map(
+        lambda a, sh: one(a, tuple(sh.shape)),
+        axes_tree, shapes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# activation-constraint context (installed by launchers)
+# ---------------------------------------------------------------------------
+
+_CTX: Optional[Tuple[Mesh, ShardingRules]] = None
+
+
+def set_context(mesh: Mesh, rules: ShardingRules) -> None:
+    global _CTX
+    _CTX = (mesh, rules)
+
+
+def clear_context() -> None:
+    global _CTX
+    _CTX = None
+
+
+def constrain(x, logical_names: Sequence[Optional[str]]):
+    """Sharding constraint on an activation; no-op without a context."""
+    if _CTX is None:
+        return x
+    mesh, rules = _CTX
+    spec = spec_for(logical_names, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

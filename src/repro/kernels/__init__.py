@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes
+# (convolution), with pure-jnp oracles and jit'd wrappers.
+from repro.kernels.attention_fold import flash_attention_folded
+from repro.kernels.ops import conv1d_causal, conv2d
+
+__all__ = ["conv1d_causal", "conv2d", "flash_attention_folded"]

@@ -1,0 +1,125 @@
+"""Fold-streamed attention Pallas kernel (flash attention as the paper's
+dataflow).
+
+The 5-D attention nest (B, H, Tq, Tkv, D) mapped with the paper's
+constructs (DESIGN.md §5, EXPERIMENTS.md §Perf cell A):
+
+  * the Q block is the stationary **Filter Fold** — resident in VMEM for
+    the whole KV stream (grid's innermost dim constant in the Q index map);
+  * K/V blocks are the streamed **Image Folds** (HBM->VMEM, double-
+    buffered by the Pallas pipeline);
+  * the online-softmax running (max, denom, acc) scratch is the
+    **reserved-column in-fabric reduction** — partial sums reduced where
+    they are produced, never round-tripping to HBM.
+
+This is the kernel the XLA-level blockwise attempt (§Perf A1/A2) cannot
+express: per-device HBM traffic collapses to q+k+v+o.
+
+GQA without expansion: the K/V BlockSpec index maps query head h to kv
+head h // group — the "multicast" of one kv fold across a group of query
+rows, with zero duplication in HBM.
+
+Grid: (B, H, Tq/qblk, Tkv/kblk), kv innermost (sequential); causal masking
+by absolute positions from the grid indices.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_folded"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, d_ref, acc_ref, *,
+            scale: float, causal: bool, window: int,
+            qblk: int, kblk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale       # (qb, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (kb, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (qb, kb)
+    qpos = iq * qblk + jax.lax.broadcasted_iota(jnp.int32, (qblk, kblk), 0)
+    kpos = ik * kblk + jax.lax.broadcasted_iota(jnp.int32, (qblk, kblk), 1)
+    mask = jnp.ones((qblk, kblk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    d_ref[...] = d_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        denom = jnp.maximum(d_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_folded(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, window: int = 0,
+                           q_block: int = 256, k_block: int = 256,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B, T, H, hd), k/v: (B, S, KV, hd) with H % KV == 0.
+
+    Returns (B, T, H, hd).  The KV head for query head h is h // (H//KV),
+    realized by the BlockSpec index map (no expansion in HBM).
+    """
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    qb = min(q_block, t)
+    kb = min(k_block, s)
+    while t % qb:
+        qb //= 2
+    while s % kb:
+        kb //= 2
+    nq, nk = t // qb, s // kb
+    kern = functools.partial(
+        _kernel, scale=hd ** -0.5, causal=causal, window=window,
+        qblk=qb, kblk=kb, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, 1, hd),
+                         lambda bb, hh, iq, ik: (bb, iq, hh, 0)),
+            pl.BlockSpec((1, kb, 1, hd),
+                         lambda bb, hh, iq, ik: (bb, ik, hh // g, 0)),
+            pl.BlockSpec((1, kb, 1, hd),
+                         lambda bb, hh, iq, ik: (bb, ik, hh // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, 1, hd),
+                               lambda bb, hh, iq, ik: (bb, iq, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),       # running max
+            pltpu.VMEM((qb,), jnp.float32),       # running denom
+            pltpu.VMEM((qb, hd), jnp.float32),    # weighted accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""Causal depthwise conv1d Pallas kernel (Mamba2 / Zamba2 hot-spot).
+
+The 1-D specialization of the fold mapping: the K filter taps are the
+stationary Filter Fold (resident in VMEM for the whole sequence), the
+sequence streams through as Image Folds along the channel-fold grid, and
+the accumulation over taps happens in registers (K is tiny: 4).
+
+Layout: x (B, T, D), w (K, D) -> (B, T, D), with
+    out[b, t, d] = sum_k w[k, d] * x[b, t-K+1+k, d]
+
+Grid: (B, D folds).  The time axis is fully resident per block — for the
+assigned shapes (T <= 32k at d_block 64, fp32) the block is <= 8 MiB, well
+inside VMEM; decode at 500k context uses the O(1) state path in
+``repro/models/ssm.py``, not this kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv1d_causal_folded"]
+
+
+def _kernel(x_ref, w_ref, out_ref, *, k: int, t: int):
+    xv = x_ref[0]                         # (T + K - 1, d_b), front-padded
+    acc = jnp.zeros((t, xv.shape[1]), dtype=jnp.float32)
+    for ki in range(k):                   # K stationary taps
+        acc += xv[ki:ki + t, :].astype(jnp.float32) * w_ref[ki, :]
+    out_ref[0] = acc.astype(out_ref.dtype)
+
+
+def conv1d_causal_folded(x: jnp.ndarray, w: jnp.ndarray, *,
+                         d_block: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """x: (B, T, D), w: (K, D) -> (B, T, D)."""
+    b, t, d = x.shape
+    k = w.shape[0]
+    d_b = min(d_block, d)
+    g_d = math.ceil(d / d_b)
+    d_pad = g_d * d_b
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, d_pad - d)))
+    wp = jnp.pad(w, ((0, 0), (0, d_pad - d)))
+    kern = functools.partial(_kernel, k=k, t=t)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, g_d),
+        in_specs=[
+            pl.BlockSpec((1, t + k - 1, d_b), lambda bb, dd: (bb, 0, dd)),
+            pl.BlockSpec((k, d_b), lambda bb, dd: (0, dd)),
+        ],
+        out_specs=pl.BlockSpec((1, t, d_b), lambda bb, dd: (bb, 0, dd)),
+        out_shape=jax.ShapeDtypeStruct((b, t, d_pad), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :, :d]

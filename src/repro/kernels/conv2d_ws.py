@@ -1,0 +1,189 @@
+"""Fold-streamed convolution Pallas kernel (the paper's technique on TPU).
+
+Two dataflows, selected by grid ordering — both derived from the paper's
+Filter-Fold / Image-Fold / Image-Block decomposition (DESIGN.md §3):
+
+* ``weight_stationary`` (paper-faithful): grid (N, NF folds, C folds, P
+  folds) with the P (image-fold) dimension innermost.  The weight block —
+  the Filter Fold — has an index map that is constant along P, so Pallas
+  keeps it resident in VMEM while image folds stream through; each depth
+  fold (Image Block) emits a partial-sum fold to HBM, and the folds are
+  accumulated afterwards — exactly the paper's Fig 5 (partial-sum folds
+  staged in L1, reduced at the end).
+
+* ``output_stationary`` (beyond-paper optimized): grid (N, NF folds, P
+  folds, C folds) with the depth dimension innermost; partial sums stay in
+  a VMEM accumulator (the reserved-column in-fabric reduction collapses
+  into the accumulator) and the output is written exactly once.  This
+  trades weight re-fetch (x P folds) for eliminating the partial-sum HBM
+  round-trip; `benchmarks/kernel_bench.py` napkin-maths the crossover.
+
+The in-kernel compute realizes the fold interaction of Fig 4: for each of
+the R*S filter taps, a strided window of the resident image rows is
+multiplied against the stationary tap column and accumulated — the MXU
+plays the PE array (filters x channels lanes), the VPU shift plays the
+stride right-shift.
+
+Inputs are NCHW, weights OIHW (matching the paper's tensors).  Caller
+pre-pads spatially (``ops.py``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.loopnest import ConvLoopNest
+from repro.core.mapping import ConvBlockPlan, plan_conv_blocks
+
+__all__ = ["conv2d_folded", "default_plan"]
+
+
+def _ws_kernel(x_ref, w_ref, out_ref, *, r: int, s: int, stride: int,
+               p_block: int, q: int, n_p: int):
+    """Weight-stationary fold interaction. Grid: (N, nf, c, p); p fastest."""
+    i_p = pl.program_id(3)
+    xv = x_ref[0]                               # (c_b, Xpad, Ypad) resident
+    acc = jnp.zeros((out_ref.shape[2], p_block, q), dtype=jnp.float32)
+    row0 = i_p * p_block * stride
+    rows = (p_block - 1) * stride + r
+    xwin = jax.lax.dynamic_slice(
+        xv, (0, row0, 0), (xv.shape[0], rows, xv.shape[2]))
+    for ri in range(r):                         # R*S stationary taps
+        for si in range(s):
+            win = xwin[:, ri:ri + p_block * stride:stride,
+                       si:si + q * stride:stride]        # (c_b, p_b, Q)
+            tap = w_ref[:, :, ri, si]                    # (nf_b, c_b)
+            acc += jax.lax.dot_general(
+                tap.astype(jnp.float32),
+                win.reshape(win.shape[0], -1).astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(acc.shape)
+    out_ref[0, 0] = acc.astype(out_ref.dtype)
+
+
+def _os_kernel(x_ref, w_ref, out_ref, acc_ref, *, r: int, s: int,
+               stride: int, p_block: int, q: int, n_c: int):
+    """Output-stationary variant. Grid: (N, nf, p, c); c fastest."""
+    i_p = pl.program_id(2)
+    i_c = pl.program_id(3)
+
+    @pl.when(i_c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xv = x_ref[0]
+    row0 = i_p * p_block * stride
+    rows = (p_block - 1) * stride + r
+    xwin = jax.lax.dynamic_slice(
+        xv, (0, row0, 0), (xv.shape[0], rows, xv.shape[2]))
+    acc = acc_ref[...]
+    for ri in range(r):
+        for si in range(s):
+            win = xwin[:, ri:ri + p_block * stride:stride,
+                       si:si + q * stride:stride]
+            tap = w_ref[:, :, ri, si]
+            acc += jax.lax.dot_general(
+                tap.astype(jnp.float32),
+                win.reshape(win.shape[0], -1).astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(acc.shape)
+    acc_ref[...] = acc
+
+    @pl.when(i_c == n_c - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+def default_plan(conv: ConvLoopNest, **kw) -> ConvBlockPlan:
+    return plan_conv_blocks(conv, **kw)
+
+
+def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
+                  stride: int = 1,
+                  plan: Optional[ConvBlockPlan] = None,
+                  dataflow: str = "weight_stationary",
+                  interpret: bool = True,
+                  out_dtype=None) -> jnp.ndarray:
+    """Run the fold-streamed conv kernel on a PRE-PADDED input.
+
+    x_padded: (N, C, Xp, Yp)   w: (NF, C, R, S)   -> (N, NF, P, Q)
+    """
+    n, c, xp_, yp_ = x_padded.shape
+    nf, cw, r, s = w.shape
+    assert c == cw, (c, cw)
+    p = (xp_ - r) // stride + 1
+    q = (yp_ - s) // stride + 1
+    out_dtype = out_dtype or x_padded.dtype
+    if plan is None:
+        cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s,
+                          x=xp_, y=yp_, stride=stride, pad=0)
+        plan = plan_conv_blocks(cv)
+    nf_b = min(plan.nf_block, nf)
+    c_b = min(plan.c_block, c)
+    p_b = min(plan.p_block, p)
+    g_nf = math.ceil(nf / nf_b)
+    g_c = math.ceil(c / c_b)
+    g_p = math.ceil(p / p_b)
+
+    # Pad every tiled dim to an exact block multiple: zero channels/filters
+    # contribute nothing to the accumulation, and extra bottom rows only
+    # produce out-of-range outputs that are sliced away.  This keeps the
+    # in-kernel dynamic_slice un-clamped (fold geometry stays exact).
+    nf_pad, c_pad, p_pad = g_nf * nf_b, g_c * c_b, g_p * p_b
+    rows_needed = (p_pad - 1) * stride + r
+    x_padded = jnp.pad(x_padded, ((0, 0), (0, c_pad - c),
+                                  (0, max(rows_needed - xp_, 0)), (0, 0)))
+    w = jnp.pad(w, ((0, nf_pad - nf), (0, c_pad - c), (0, 0), (0, 0)))
+    xp_r = x_padded.shape[2]
+
+    if dataflow == "weight_stationary":
+        # out: one partial-sum fold per depth fold (paper Fig 5)
+        kern = functools.partial(_ws_kernel, r=r, s=s, stride=stride,
+                                 p_block=p_b, q=q, n_p=g_p)
+        partial_sums = pl.pallas_call(
+            kern,
+            grid=(n, g_nf, g_c, g_p),
+            in_specs=[
+                pl.BlockSpec((1, c_b, xp_r, yp_),
+                             lambda b, f, cc, pp: (b, cc, 0, 0)),
+                pl.BlockSpec((nf_b, c_b, r, s),
+                             lambda b, f, cc, pp: (f, cc, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, nf_b, p_b, q),
+                                   lambda b, f, cc, pp: (cc, b, f, pp, 0)),
+            out_shape=jax.ShapeDtypeStruct((g_c, n, nf_pad, p_pad, q),
+                                           out_dtype),
+            interpret=interpret,
+        )(x_padded, w)
+        # multi-depth reduce of the partial-sum folds (paper Fig 5)
+        return partial_sums.sum(axis=0)[:, :nf, :p].astype(out_dtype)
+
+    if dataflow == "output_stationary":
+        kern = functools.partial(_os_kernel, r=r, s=s, stride=stride,
+                                 p_block=p_b, q=q, n_c=g_c)
+        out = pl.pallas_call(
+            kern,
+            grid=(n, g_nf, g_p, g_c),
+            in_specs=[
+                pl.BlockSpec((1, c_b, xp_r, yp_),
+                             lambda b, f, pp, cc: (b, cc, 0, 0)),
+                pl.BlockSpec((nf_b, c_b, r, s),
+                             lambda b, f, pp, cc: (f, cc, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, nf_b, p_b, q),
+                                   lambda b, f, pp, cc: (b, f, pp, 0)),
+            out_shape=jax.ShapeDtypeStruct((n, nf_pad, p_pad, q), out_dtype),
+            scratch_shapes=[pltpu.VMEM((nf_b, p_b, q), jnp.float32)],
+            interpret=interpret,
+        )(x_padded, w)
+        return out[:, :nf, :p]
+
+    raise ValueError(f"unknown dataflow {dataflow!r}")

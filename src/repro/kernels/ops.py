@@ -1,0 +1,147 @@
+"""Public jit'd wrappers for the fold-streamed kernels.
+
+Dispatch policy:
+  * On TPU, the Pallas kernels run compiled (interpret=False).
+  * On CPU (this container), the kernels run under ``interpret=True`` for
+    validation; the default *production* path on CPU is the pure-jnp
+    reference (XLA fuses it well), so that models remain fast to test.
+  * ``impl`` forces a specific path:
+      "fold_ws"  — weight-stationary Pallas (paper-faithful dataflow)
+      "fold_os"  — output-stationary Pallas (beyond-paper optimized)
+      "im2col"   — GEMM baseline (what the paper argues against)
+      "direct"   — shifted-matmul reference
+      "xla"      — lax.conv_general_dilated
+
+Gradients: conv ops carry a ``jax.custom_vjp`` whose backward pass is
+expressed with the same reference primitives (transposed conv relations),
+so every impl is trainable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.conv1d_causal import conv1d_causal_folded
+from repro.kernels.conv2d_ws import conv2d_folded
+
+__all__ = ["conv2d", "conv1d_causal", "default_conv_impl"]
+
+
+def default_conv_impl() -> str:
+    return "fold_os" if jax.default_backend() == "tpu" else "direct"
+
+
+def _conv2d_fwd_impl(x, w, stride: int, pad: int, impl: str):
+    if impl == "xla":
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    if impl == "direct":
+        return _ref.conv2d_direct(x, w, stride, pad)
+    if impl == "im2col":
+        return _ref.conv2d_im2col(x, w, stride, pad)
+    if impl in ("fold_ws", "fold_os"):
+        xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        dataflow = ("weight_stationary" if impl == "fold_ws"
+                    else "output_stationary")
+        return conv2d_folded(xp, w, stride=stride, dataflow=dataflow,
+                             interpret=jax.default_backend() != "tpu")
+    raise ValueError(f"unknown conv impl {impl!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _conv2d(x, w, stride, pad, impl):
+    return _conv2d_fwd_impl(x, w, stride, pad, impl)
+
+
+def _conv2d_vjp_fwd(x, w, stride, pad, impl):
+    return _conv2d_fwd_impl(x, w, stride, pad, impl), (x, w)
+
+
+def _conv2d_vjp_bwd(stride, pad, impl, res, g):
+    x, w = res
+    n, c, xh, xw_ = x.shape
+    nf, _, r, s = w.shape
+    # dL/dx: transposed conv = conv of dilated g with spatially-flipped,
+    # io-transposed w.
+    g32 = g.astype(jnp.float32)
+    w_flip = jnp.flip(w, axis=(2, 3)).transpose(1, 0, 2, 3)  # (C, NF, R, S)
+    dx = jax.lax.conv_general_dilated(
+        g32, w_flip.astype(jnp.float32), window_strides=(1, 1),
+        padding=[(r - 1 - pad, r - 1 - pad + (xh + 2 * pad - r) % stride),
+                 (s - 1 - pad, s - 1 - pad + (xw_ + 2 * pad - s) % stride)],
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    dx = dx[:, :, :xh, :xw_].astype(x.dtype)
+    # dL/dw: correlate x with g.
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad))
+                 ).astype(jnp.float32)
+    p, q = g.shape[2], g.shape[3]
+    dw = jnp.zeros((nf, c, r, s), dtype=jnp.float32)
+    for ri in range(r):
+        for si in range(s):
+            win = xp[:, :, ri:ri + p * stride:stride,
+                     si:si + q * stride:stride]
+            dw = dw.at[:, :, ri, si].set(
+                jnp.einsum("nfpq,ncpq->fc", g32, win))
+    return dx, dw.astype(w.dtype)
+
+
+_conv2d.defvjp(_conv2d_vjp_fwd, _conv2d_vjp_bwd)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0,
+           impl: Optional[str] = None) -> jnp.ndarray:
+    """Convolution through the fold framework.  x: NCHW, w: OIHW."""
+    return _conv2d(x, w, stride, pad, impl or default_conv_impl())
+
+
+# ---------------------------------------------------------------------------
+
+
+def _conv1d_fwd_impl(x, w, impl: str):
+    if impl == "fold":
+        return conv1d_causal_folded(
+            x, w, interpret=jax.default_backend() != "tpu")
+    return _ref.conv1d_causal_ref(x, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _conv1d(x, w, impl):
+    return _conv1d_fwd_impl(x, w, impl)
+
+
+def _conv1d_vjp_fwd(x, w, impl):
+    return _conv1d_fwd_impl(x, w, impl), (x, w)
+
+
+def _conv1d_vjp_bwd(impl, res, g):
+    x, w = res
+    k = w.shape[0]
+    t = x.shape[1]
+    g32 = g.astype(jnp.float32)
+    # dx[b,t,d] = sum_k w[k,d] * g[b, t + K - 1 - k, d]  (anticausal)
+    gp = jnp.pad(g32, ((0, 0), (0, k - 1), (0, 0)))
+    dx = jnp.zeros(x.shape, jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0))).astype(jnp.float32)
+    dw = jnp.zeros(w.shape, jnp.float32)
+    for ki in range(k):
+        dx += gp[:, k - 1 - ki:k - 1 - ki + t, :] * w[ki]
+        dw = dw.at[ki].set(jnp.einsum("btd,btd->d", g32,
+                                      xp[:, ki:ki + t, :]))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_conv1d.defvjp(_conv1d_vjp_fwd, _conv1d_vjp_bwd)
+
+
+def conv1d_causal(x: jnp.ndarray, w: jnp.ndarray,
+                  impl: Optional[str] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d.  x: (B, T, D), w: (K, D)."""
+    if impl is None:
+        impl = "fold" if jax.default_backend() == "tpu" else "ref"
+    return _conv1d(x, w, impl)

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (device count locks on
+# first init).  Everything below is the multi-pod dry-run: lower + compile
+# every (arch x shape) cell against the production mesh and record memory /
+# cost / collective analysis for EXPERIMENTS.md.
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, get_config
+from repro.distributed import sharding as shd
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, abstract_opt_state, opt_state_axes
+from repro.roofline import TPU_V5E, roofline_terms
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.train.steps import make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the step (6ND train / 2ND forward)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq
+
+
+def _dp_size(mesh):
+    return int(mesh.shape.get("pod", 1)) * int(mesh.shape.get("data", 1))
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               remat: str = "dots", attn_impl: str = "naive",
+               seq_shard_kv=None, extra=None):
+    """Lower+compile one cell.  Returns (compiled, meta dict)."""
+    cfg = get_config(arch)
+    if extra:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **extra)
+    shape = SHAPES[shape_name]
+    if not cfg.runs_shape(shape):
+        return None, {"skipped": True,
+                      "reason": f"{arch} is full-attention; {shape_name} "
+                                "requires sub-quadratic (DESIGN.md §6)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = _dp_size(mesh)
+    shard_batch = shape.global_batch % dp == 0
+    if seq_shard_kv is None:
+        seq_shard_kv = shape.kind == "decode" and not shard_batch
+    rules = shd.make_rules(cfg, mesh, seq_shard_kv=seq_shard_kv,
+                           shard_batch=shard_batch)
+    shd.set_context(mesh, rules)
+
+    params_abs = api.init_params(cfg, abstract=True)
+    axes = api.param_axes(cfg)
+    p_sh = shd.tree_shardings(axes, rules, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_abs = abstract_opt_state(params_abs)
+        o_sh = {
+            "step": repl,
+            "mu": shd.zero1_shardings(axes, params_abs, rules, mesh),
+            "nu": shd.zero1_shardings(axes, params_abs, rules, mesh),
+            "master": shd.zero1_shardings(axes, params_abs, rules, mesh),
+        }
+        batch_abs = specs_mod.train_batch_specs(cfg, shape)
+        b_sh = jax.tree.map(
+            lambda a: NamedSharding(mesh, shd.spec_for(a, rules)),
+            specs_mod.train_batch_axes(cfg),
+            is_leaf=lambda x: isinstance(x, tuple))
+        step = make_train_step(cfg, AdamWConfig(), remat=remat,
+                               attn_impl=attn_impl)
+        metrics_sh = {k: repl for k in
+                      ("loss", "aux_loss", "grad_norm", "lr")}
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, metrics_sh),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    else:
+        max_len = shape.seq_len + (cfg.frontend_len
+                                   if cfg.frontend == "vlm" else 0)
+        src_len = specs_mod.src_len_for(cfg, shape)
+        cache_abs = api.init_cache(cfg, shape.global_batch, max_len,
+                                   src_len=src_len, abstract=True)
+        c_sh = shd.tree_shardings(api.cache_axes(cfg), rules, mesh)
+        if shape.kind == "prefill":
+            batch_abs = specs_mod.prefill_batch_specs(cfg, shape)
+            b_sh = jax.tree.map(
+                lambda a: NamedSharding(mesh, shd.spec_for(a, rules)),
+                specs_mod.prefill_batch_axes(cfg),
+                is_leaf=lambda x: isinstance(x, tuple))
+            step = make_prefill_step(cfg, attn_impl=attn_impl)
+            tok_sh = NamedSharding(mesh, shd.spec_for(("batch",), rules))
+            lg_sh = NamedSharding(mesh, shd.spec_for(("batch", "vocab"),
+                                                     rules))
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                             out_shardings=(tok_sh, lg_sh, c_sh),
+                             donate_argnums=(2,))
+            with mesh:
+                lowered = jitted.lower(params_abs, batch_abs, cache_abs)
+        else:  # decode
+            token_abs, pos_abs = specs_mod.decode_input_specs(cfg, shape)
+            step = make_decode_step(cfg)
+            tok_sh = NamedSharding(mesh, shd.spec_for(("batch",), rules))
+            lg_sh = NamedSharding(mesh, shd.spec_for(("batch", "vocab"),
+                                                     rules))
+            jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh, repl),
+                             out_shardings=(tok_sh, lg_sh, c_sh),
+                             donate_argnums=(2,))
+            with mesh:
+                lowered = jitted.lower(params_abs, token_abs, cache_abs,
+                                       pos_abs)
+    t0 = time.time()
+    compiled = lowered.compile()
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "remat": remat if shape.kind == "train" else None,
+        "attn_impl": attn_impl,
+        "seq_shard_kv": bool(seq_shard_kv),
+        "shard_batch": bool(shard_batch),
+        "compile_s": time.time() - t0,
+    }
+    shd.clear_context()
+    return compiled, meta
+
+
+def analyze(compiled, meta, cfg, shape):
+    ma = compiled.memory_analysis()
+    rep = roofline_terms(compiled, chips=meta["chips"],
+                         model_flops=model_flops_for(cfg, shape))
+    out = dict(meta)
+    out["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "total_per_device": (ma.argument_size_in_bytes
+                             + ma.output_size_in_bytes
+                             + ma.temp_size_in_bytes
+                             - ma.alias_size_in_bytes),
+    }
+    out["roofline"] = rep.as_dict()
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: Path,
+             save_hlo: bool = False, tag_suffix=None, **kw):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    if tag_suffix:
+        tag += f"__{tag_suffix}"
+    out_path = outdir / f"{tag}.json"
+    outdir.mkdir(parents=True, exist_ok=True)
+    try:
+        compiled, meta = build_cell(arch, shape_name, multi_pod, **kw)
+        if compiled is None:
+            result = meta | {"arch": arch, "shape": shape_name,
+                             "mesh": "2x16x16" if multi_pod else "16x16"}
+        else:
+            result = analyze(compiled, meta, cfg, shape)
+            if save_hlo:
+                (outdir / f"{tag}.hlo.txt").write_text(compiled.as_text())
+        result["ok"] = True
+    except Exception as e:  # record the failure for the farm driver
+        result = {"arch": arch, "shape": shape_name, "ok": False,
+                  "mesh": "2x16x16" if multi_pod else "16x16",
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    outdir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(result, indent=1, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--attn-impl", default="naive",
+                    choices=["naive", "blockwise"])
+    ap.add_argument("--extra", default=None,
+                    help="JSON dict of ArchConfig field overrides")
+    ap.add_argument("--remat-override", default=None)
+    ap.add_argument("--tag", default=None,
+                    help="suffix for the result filename")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for sname in shapes:
+            for mp in meshes:
+                tag = (f"{arch}__{sname}__"
+                       f"{'2x16x16' if mp else '16x16'}")
+                if args.skip_existing and (outdir / f"{tag}.json").exists():
+                    prev = json.loads((outdir / f"{tag}.json").read_text())
+                    if prev.get("ok"):
+                        print(f"[skip] {tag}")
+                        continue
+                t0 = time.time()
+                extra = json.loads(args.extra) if args.extra else None
+                r = run_cell(arch, sname, mp, outdir,
+                             save_hlo=args.save_hlo, remat=args.remat,
+                             attn_impl=args.attn_impl, extra=extra,
+                             tag_suffix=args.tag)
+                status = ("SKIP(" + r.get("reason", "")[:40] + ")"
+                          if r.get("skipped") else
+                          "OK" if r.get("ok") else
+                          "FAIL " + r.get("error", "")[:120])
+                print(f"[{time.time()-t0:7.1f}s] {tag}: {status}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

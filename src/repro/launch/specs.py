@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct input stands-ins for every (arch x shape) cell.
+
+The dry-run lowers against these (weak-type-correct, shardable, zero
+allocation).  [vlm]/[audio] archs get their stubbed frontend embeddings
+here, per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+__all__ = ["train_batch_specs", "train_batch_axes", "decode_input_specs",
+           "prefill_batch_specs", "src_len_for"]
+
+
+def src_len_for(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """Encoder source length for enc-dec archs (stub frames = seq_len)."""
+    return shape.seq_len if cfg.is_encdec else 0
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+    if cfg.frontend == "vlm":
+        batch["patches"] = sds((b, cfg.frontend_len, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.is_encdec:
+        batch["src_embeds"] = sds((b, src_len_for(cfg, shape), cfg.d_model),
+                                  jnp.bfloat16)
+    return batch
+
+
+def train_batch_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    if cfg.frontend == "vlm":
+        axes["patches"] = ("batch", None, None)
+    if cfg.is_encdec:
+        axes["src_embeds"] = ("batch", None, None)
+    return axes
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    # same tensors minus labels
+    b = dict(train_batch_specs(cfg, shape))
+    b.pop("labels")
+    return b
+
+
+def prefill_batch_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    a = dict(train_batch_axes(cfg))
+    a.pop("labels")
+    return a
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec
+                       ) -> Tuple[Any, Any]:
+    """(token, pos) stand-ins; the cache comes from api.init_cache."""
+    b = shape.global_batch
+    return (jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))

@@ -1,0 +1,51 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs the reduced config by default (the full
+configs are exercised via the dry-run); pass ``--full`` on real hardware.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedules import warmup_cosine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (real hardware)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    opt = AdamWConfig(lr=args.lr,
+                      schedule=warmup_cosine(args.lr, args.warmup,
+                                             args.steps))
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed,
+                      frontend=cfg.frontend, frontend_len=cfg.frontend_len,
+                      d_model=cfg.d_model)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every, remat=args.remat,
+                         n_micro=args.n_micro, seed=args.seed)
+    trainer = Trainer(cfg, tcfg, opt_cfg=opt, data_cfg=data)
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Family-dispatch facade: one API over decoder-only and enc-dec models.
+
+Everything downstream (train steps, serve steps, dry-run, tests) goes
+through these five functions so architecture families stay interchangeable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.common import DTypePolicy
+
+__all__ = ["init_params", "param_axes", "lm_loss", "init_cache",
+           "prefill", "decode_step", "cache_axes"]
+
+
+def _mod(cfg):
+    return encdec if cfg.is_encdec else transformer
+
+
+def init_params(cfg, key=None, abstract: bool = False,
+                dtype_policy: Optional[DTypePolicy] = None):
+    return _mod(cfg).init_params(cfg, key, abstract=abstract,
+                                 dtype_policy=dtype_policy)
+
+
+def param_axes(cfg):
+    return _mod(cfg).param_axes(cfg)
+
+
+def lm_loss(params, cfg, batch, aux_coef: float = 0.01):
+    return _mod(cfg).lm_loss(params, cfg, batch, aux_coef=aux_coef)
+
+
+def init_cache(cfg, batch: int, max_len: int, *, src_len: int = 0,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    if cfg.is_encdec:
+        return encdec.init_cache(cfg, batch, max_len, src_len or max_len,
+                                 dtype=dtype, abstract=abstract)
+    return transformer.init_cache(cfg, batch, max_len, dtype=dtype,
+                                  abstract=abstract)
+
+
+def prefill(params, cfg, batch: Dict[str, jnp.ndarray], cache):
+    if cfg.is_encdec:
+        return encdec.prefill(params, cfg, batch, cache)
+    return transformer.prefill(params, cfg, batch["tokens"], cache,
+                               extra_embeds=batch.get("patches"))
+
+
+def decode_step(params, cfg, token, cache, pos):
+    return _mod(cfg).decode_step(params, cfg, token, cache, pos)
+
+
+def cache_axes(cfg):
+    """Logical axes tree for the decode cache (mirrors init_cache)."""
+    from repro.models.common import Axes
+
+    def kv():
+        return {"k": (Axes.LAYERS, Axes.BATCH, "seq_kv", "cache_kv",
+                      Axes.HEAD_DIM),
+                "v": (Axes.LAYERS, Axes.BATCH, "seq_kv", "cache_kv",
+                      Axes.HEAD_DIM)}
+    if cfg.is_encdec:
+        return {"self": kv(),
+                "cross": {"k": (Axes.LAYERS, Axes.BATCH, None, "cache_kv",
+                                Axes.HEAD_DIM),
+                          "v": (Axes.LAYERS, Axes.BATCH, None, "cache_kv",
+                                Axes.HEAD_DIM)}}
+    if cfg.block == "rwkv6":
+        return {"s": (Axes.LAYERS, Axes.BATCH, Axes.HEADS, None, None),
+                "x_tm": (Axes.LAYERS, Axes.BATCH, Axes.EMBED),
+                "x_cm": (Axes.LAYERS, Axes.BATCH, Axes.EMBED)}
+    if cfg.block == "mamba2":
+        return {"mamba": {"conv": (Axes.LAYERS, Axes.BATCH, None,
+                                   Axes.SSM_INNER),
+                          "h": (Axes.LAYERS, Axes.BATCH, None, None, None)},
+                "attn": kv()}
+    from repro.models.transformer import uses_window_cache
+    if uses_window_cache(cfg):
+        ring = {"k": (None, Axes.LAYERS, Axes.BATCH, None, "cache_kv",
+                      Axes.HEAD_DIM),
+                "v": (None, Axes.LAYERS, Axes.BATCH, None, "cache_kv",
+                      Axes.HEAD_DIM)}
+        return {"local": ring, "global": kv()}
+    return kv()

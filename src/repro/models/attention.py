@@ -1,0 +1,332 @@
+"""GQA attention with qk-norm, QKV bias, RoPE, sliding-window/global masks,
+cross-attention, and a position-indexed KV cache for decode.
+
+Dataflow note (DESIGN.md §5): attention is the 5-D loop nest
+(B, H, Tq, Tkv, D).  The mapping derived from the paper's directive algebra
+is Spatial Map(B -> data, H -> model), Temporal Map(Tkv streamed) — i.e.
+Q stationary, K/V streamed — which is exactly the weight-stationary fold
+pattern with Q playing the Filter Fold.  The mesh-level realization is the
+sharding constraint set in ``repro/distributed/sharding.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Axes, TreeMaker
+from repro.models.layers import apply_rope, rms_norm
+
+__all__ = ["attn_params", "attention", "init_kv_cache", "make_mask"]
+
+
+def attn_params(tm: TreeMaker, cfg) -> Dict[str, Any]:
+    d, kv, hd = cfg.d_model, cfg.kv_heads, cfg.head_dim_
+    h = cfg.padded_heads     # padded for even TP; padded heads are masked
+    p = {
+        "wq": tm.param((d, h, hd), (Axes.EMBED, Axes.HEADS, Axes.HEAD_DIM)),
+        "wk": tm.param((d, kv, hd), (Axes.EMBED, Axes.KV_HEADS, Axes.HEAD_DIM)),
+        "wv": tm.param((d, kv, hd), (Axes.EMBED, Axes.KV_HEADS, Axes.HEAD_DIM)),
+        "wo": tm.param((h, hd, d), (Axes.HEADS, Axes.HEAD_DIM, Axes.EMBED)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = tm.param((h, hd), (Axes.HEADS, Axes.HEAD_DIM), init="zeros")
+        p["bk"] = tm.param((kv, hd), (Axes.KV_HEADS, Axes.HEAD_DIM), init="zeros")
+        p["bv"] = tm.param((kv, hd), (Axes.KV_HEADS, Axes.HEAD_DIM), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = tm.param((hd,), (Axes.HEAD_DIM,), init="ones")
+        p["k_norm"] = tm.param((hd,), (Axes.HEAD_DIM,), init="ones")
+    return p
+
+
+def make_mask(q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
+              causal: bool = True, window=0,
+              kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Boolean (Tq, Tkv) mask.  window > 0 limits lookback (sliding);
+    ``window`` may be a traced scalar (scanned per-layer window)."""
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= k <= q
+    if isinstance(window, int):
+        if window > 0:
+            mask &= k > q - window
+    else:
+        mask &= jnp.where(window > 0, k > q - window, True)
+    if kv_len is not None:
+        mask &= k < kv_len
+    return mask
+
+
+def _project_kv(p, cfg, x):
+    k = jnp.einsum("btd,dkh->btkh", x, p["wk"])
+    v = jnp.einsum("btd,dkh->btkh", x, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def _mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray], head_dim: int) -> jnp.ndarray:
+    """Grouped-query core.  q: (B,T,H,hd), k/v: (B,S,KV,hd) -> (B,T,H,hd).
+
+    Softmax in fp32; scores bf16 matmul with fp32 accumulation.
+    Materializes the (T, S) score tensor — O(S^2) HBM traffic; the
+    blockwise variant below avoids that (EXPERIMENTS.md §Perf iteration 1).
+    """
+    b, t, h, hd = q.shape
+    kv = k.shape[2]
+    if t == 1 and kv != h:
+        # decode: grouped-Q einsum — expanding K/V would materialize a
+        # g x copy of the (possibly 500k-token) cache; the tiny one-token
+        # score matmul does not need the head dim shardable
+        g = h // kv
+        qg = q.reshape(b, t, kv, g, hd)
+        scores = jnp.einsum("btkgh,bskh->bkgts", qg, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores * (head_dim ** -0.5)
+        if mask is not None:
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, t, h, hd).astype(q.dtype)
+    k, v = _expand_kv(k, v, h)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (head_dim ** -0.5)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _expand_kv(k, v, h):
+    """GQA K/V -> full query-head count.
+
+    With TP degree > kv_heads the kv dim is unshardable, and a grouped-Q
+    einsum (b,t,KV,G,hd x b,s,KV,hd) forces GSPMD to REPLICATE the whole
+    attention computation across the model axis (measured: 16x redundant
+    flops on qwen2.5 — EXPERIMENTS.md §Perf cell A iter 4).  Expanding K/V
+    to all H heads keeps the head dim sharded; the broadcast fuses into the
+    score matmul on TPU.
+    """
+    kv = k.shape[2]
+    if kv == h:
+        return k, v
+    g = h // kv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    from repro.distributed.sharding import constrain
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    return k, v
+
+
+def _mha_blockwise(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
+                   head_dim: int, causal: bool = True, window=0,
+                   kv_len=None, block: int = 1024) -> jnp.ndarray:
+    """Flash-style online-softmax attention: scan over KV blocks carrying
+    (running max, denom, weighted accumulator).  Exact same math as _mha
+    (up to fp regrouping) with O(T x block) score footprint instead of
+    O(T x S) — this is the paper's Image-Fold streaming discipline applied
+    to the 5-D attention nest: Q is the stationary fold, K/V stream in
+    blocks, the online max/denom is the in-fabric partial-sum reduction.
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    k, v = _expand_kv(k, v, h)
+    if s % block:
+        block = s if s <= block else max(
+            bs for bs in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+            if s % bs == 0)
+    nb = s // block
+    qs = (q * (head_dim ** -0.5)).astype(q.dtype)
+    kb = k.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, block, h, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(nb, block)
+
+    m0 = jnp.full((b, h, t), -1e30, jnp.float32)
+    d0 = jnp.zeros((b, h, t), jnp.float32)
+    a0 = jnp.zeros((b, t, h, hd), jnp.float32)
+
+    def body(carry, xs):
+        m, d, acc = carry
+        kblk, vblk, pblk = xs
+        sc = jnp.einsum("bthd,bshd->bhts", qs, kblk,
+                        preferred_element_type=jnp.float32)
+        msk = make_mask(q_pos, pblk, causal=causal, window=window,
+                        kv_len=kv_len)
+        sc = jnp.where(msk[None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        d = d * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhts,bshd->bthd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, d, acc), None
+
+    (m, d, acc), _ = jax.lax.scan(body, (m0, d0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(d.transpose(0, 2, 1)[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def attention(p: Dict[str, Any], cfg, x: jnp.ndarray, *,
+              positions: jnp.ndarray,
+              inv_freq: Optional[jnp.ndarray],
+              causal: bool = True,
+              window: int = 0,
+              cache: Optional[Dict[str, jnp.ndarray]] = None,
+              cache_pos: Optional[jnp.ndarray] = None,
+              kv_x: Optional[jnp.ndarray] = None,
+              kv_positions: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Self- or cross-attention.
+
+    * train/prefill: cache=None, full sequence in ``x``.
+    * decode: ``cache`` holds (k, v) of shape (B, S_max, KV, hd); the new
+      token's k/v are written at ``cache_pos`` and attention runs over the
+      first ``cache_pos+1`` entries.
+    * cross-attention: ``kv_x`` is the encoder output (keys/values source);
+      RoPE and causality are disabled for it.
+
+    Returns (output (B,T,D), updated cache or None).
+    """
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+
+    from repro.models.settings import get_attn_impl
+    blockwise = None     # set to kwargs for the flash-style path
+    cross = kv_x is not None
+    if cross:
+        k, v = _project_kv(p, cfg, kv_x)
+        kv_pos = (kv_positions if kv_positions is not None
+                  else jnp.arange(k.shape[1]))
+        mask = None  # encoder side fully visible
+        new_cache = None
+        if inv_freq is not None:
+            q = apply_rope(q, positions, inv_freq)
+    else:
+        if inv_freq is not None:
+            q = apply_rope(q, positions, inv_freq)
+        if cache is None:
+            k, v = _project_kv(p, cfg, x)
+            if inv_freq is not None:
+                k = apply_rope(k, positions, inv_freq)
+            kv_pos = positions
+            mask = make_mask(positions, kv_pos, causal=causal, window=window)
+            new_cache = None
+            if get_attn_impl() == "blockwise" and x.shape[1] > 1:
+                blockwise = dict(q_pos=positions, kv_pos=kv_pos,
+                                 causal=causal, window=window, kv_len=None)
+        else:
+            k_new, v_new = _project_kv(p, cfg, x)
+            if inv_freq is not None:
+                k_new = apply_rope(k_new, positions, inv_freq)
+            # write T tokens at cache_pos (T=1 decode, T=S prefill),
+            # expanded to the shardable cache head count
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], _to_cache_heads(cfg, k_new).astype(
+                    cache["k"].dtype), (0, cache_pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], _to_cache_heads(cfg, v_new).astype(
+                    cache["v"].dtype), (0, cache_pos, 0, 0))
+            new_cache = {"k": k, "v": v}
+            kv_pos = jnp.arange(k.shape[1])
+            mask = make_mask(positions, kv_pos, causal=causal, window=window,
+                             kv_len=cache_pos + x.shape[1])
+            if get_attn_impl() == "blockwise" and x.shape[1] > 1:
+                blockwise = dict(q_pos=positions, kv_pos=kv_pos,
+                                 causal=causal, window=window,
+                                 kv_len=cache_pos + x.shape[1])
+    if blockwise is not None:
+        # flash-attention discipline: save NOTHING from the KV-block loop;
+        # the backward recomputes block scores (2x attention flops) instead
+        # of reloading O(T x S) residuals from HBM.  Without this policy the
+        # scan stacks per-block probabilities and the memory win vanishes
+        # (measured: 39 TB/dev vs 2 TB/dev — EXPERIMENTS.md §Perf iter 1-2).
+        bw = blockwise
+
+        def _flash(q_, k_, v_):
+            return _mha_blockwise(q_, k_, v_, head_dim=cfg.head_dim_, **bw)
+        out = jax.checkpoint(
+            _flash, policy=jax.checkpoint_policies.nothing_saveable)(
+                q, k.astype(q.dtype), v.astype(q.dtype))
+    else:
+        out = _mha(q, k.astype(q.dtype), v.astype(q.dtype), mask,
+                   cfg.head_dim_)
+    if cfg.padded_heads != cfg.n_heads:   # zero the padded heads (exactness)
+        hmask = (jnp.arange(cfg.padded_heads) < cfg.n_heads)
+        out = out * hmask[None, None, :, None].astype(out.dtype)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return out, new_cache
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                  abstract: bool = False):
+    """One layer's KV cache (kv heads expanded to cfg.cache_kv_heads)."""
+    shape = (batch, max_len, cfg.cache_kv_heads, cfg.head_dim_)
+    if abstract:
+        return {"k": jax.ShapeDtypeStruct(shape, dtype),
+                "v": jax.ShapeDtypeStruct(shape, dtype)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _to_cache_heads(cfg, kv: jnp.ndarray) -> jnp.ndarray:
+    """Duplicate KV heads up to the cache head count (pure replication —
+    the q->kv group mapping is preserved by jnp.repeat ordering)."""
+    rep = cfg.cache_kv_heads // kv.shape[2]
+    return jnp.repeat(kv, rep, axis=2) if rep > 1 else kv
+
+
+def ring_decode_attention(p: Dict[str, Any], cfg, x: jnp.ndarray, *,
+                          pos: jnp.ndarray,
+                          inv_freq: Optional[jnp.ndarray],
+                          cache: Dict[str, jnp.ndarray]
+                          ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode against a RING buffer of W slots (sliding-window
+    layers).  Slot i holds the K/V of the newest position p <= pos with
+    p === i (mod W); RoPE is applied at write time, so ring order is
+    irrelevant to the attention math.  Memory: O(W) instead of O(seq) —
+    the optimization of EXPERIMENTS.md §Perf cell C.
+    """
+    w = cache["k"].shape[1]
+    positions = pos[None]
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+    k_new, v_new = _project_kv(p, cfg, x)
+    if inv_freq is not None:
+        k_new = apply_rope(k_new, positions, inv_freq)
+    slot = jnp.mod(pos, w)
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], _to_cache_heads(cfg, k_new).astype(cache["k"].dtype),
+        (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], _to_cache_heads(cfg, v_new).astype(cache["v"].dtype),
+        (0, slot, 0, 0))
+    # per-slot absolute position: latest p <= pos with p === i (mod W)
+    idx = jnp.arange(w)
+    slot_pos = pos - jnp.mod(pos - idx, w)
+    mask = (slot_pos >= 0)[None, :]               # (1, W): warmup guard
+    out = _mha(q, k.astype(q.dtype), v.astype(q.dtype), mask, cfg.head_dim_)
+    if cfg.padded_heads != cfg.n_heads:
+        hmask = (jnp.arange(cfg.padded_heads) < cfg.n_heads)
+        out = out * hmask[None, None, :, None].astype(out.dtype)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return out, {"k": k, "v": v}

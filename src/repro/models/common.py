@@ -1,0 +1,136 @@
+"""Shared model-construction machinery.
+
+Parameters are plain pytrees (nested dicts of ``jnp.ndarray``).  Every
+parameter is declared exactly once, through a :class:`TreeMaker`, which can
+be run in two modes over the *same* structure definition:
+
+  * ``init``  — materialize arrays (optionally as ShapeDtypeStructs for the
+    dry-run, so no host memory is ever allocated for the full configs);
+  * ``axes``  — produce an identical-structure tree of *logical axis names*
+    (the paper's Spatial-Map directives applied to weights; see
+    ``repro/distributed/sharding.py`` for the logical->mesh binding).
+
+This single-definition/dual-interpretation scheme is what keeps the sharding
+rules from drifting out of sync with the model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TreeMaker", "Axes", "DTypePolicy", "stack_trees"]
+
+
+# Logical axis names (bound to mesh axes by distributed/sharding.py)
+class Axes:
+    LAYERS = "layers"        # scan-stacking axis, never sharded
+    BATCH = "batch"
+    SEQ = "seq"
+    EMBED = "embed"
+    VOCAB = "vocab"
+    HEADS = "heads"
+    KV_HEADS = "kv_heads"
+    HEAD_DIM = "head_dim"
+    MLP = "mlp"              # ffn hidden
+    EXPERTS = "experts"
+    EXPERT_MLP = "expert_mlp"
+    SSM_INNER = "ssm_inner"  # mamba/rwkv expanded inner dim
+    STATE = "state"          # ssm state dim
+    CONV_K = "conv_k"
+    NONE = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Mixed-precision policy (bf16 compute, fp32 reductions/master)."""
+    param: Any = jnp.bfloat16
+    compute: Any = jnp.bfloat16
+    accum: Any = jnp.float32     # norms, softmax, loss, psum accumulators
+    master: Any = jnp.float32    # optimizer master copy / moments
+
+    @classmethod
+    def fp32(cls) -> "DTypePolicy":
+        return cls(param=jnp.float32, compute=jnp.float32)
+
+
+class TreeMaker:
+    """Declare-once parameter trees.
+
+    mode="init":     leaves are initialized jnp arrays (key-split per leaf)
+    mode="abstract": leaves are ShapeDtypeStructs (dry-run: zero allocation)
+    mode="axes":     leaves are tuples of logical axis names
+    """
+
+    def __init__(self, mode: str, key: Optional[jax.Array] = None,
+                 dtype_policy: Optional[DTypePolicy] = None):
+        assert mode in ("init", "abstract", "axes"), mode
+        self.mode = mode
+        self._key = key
+        self.dp = dtype_policy or DTypePolicy()
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, shape: Sequence[int], axes: Sequence[Optional[str]],
+              init: str = "normal", scale: Optional[float] = None,
+              dtype: Any = None) -> Any:
+        """Declare one parameter.
+
+        init: "normal" (trunc-normal, fan-in scaled unless ``scale``),
+              "zeros", "ones", "ssm_a" (mamba A_log), "ssm_dt" (dt bias).
+        """
+        shape = tuple(int(s) for s in shape)
+        assert len(shape) == len(axes), (shape, axes)
+        if self.mode == "axes":
+            return tuple(axes)
+        dtype = dtype or self.dp.param
+        if self.mode == "abstract":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        k = self._next_key()
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "ssm_a":  # A_log ~ log(uniform[1, 16]) (mamba2 default)
+            u = jax.random.uniform(k, shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dtype)
+        if init == "ssm_dt":  # dt bias = softplus^-1(uniform[1e-3, 1e-1])
+            u = jax.random.uniform(k, shape, jnp.float32, 1e-3, 1e-1)
+            return jnp.log(jnp.expm1(u)).astype(dtype)
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+                scale = 1.0 / math.sqrt(fan_in)
+            x = jax.random.truncated_normal(k, -2.0, 2.0, shape, jnp.float32)
+            return (x * scale).astype(dtype)
+        raise ValueError(f"unknown init {init!r}")
+
+
+def stack_trees(trees: Sequence[Any]) -> Any:
+    """Stack a list of identically-structured trees along a new leading
+    'layers' axis (for ``lax.scan`` over homogeneous blocks)."""
+    if not trees:
+        raise ValueError("empty")
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_abstract(tree: Any, n: int) -> Any:
+    """Abstract analogue of stack_trees for ShapeDtypeStruct trees."""
+    def add(leaf):
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct((n,) + tuple(leaf.shape), leaf.dtype)
+        return leaf
+    return jax.tree.map(add, tree)
+
+
+def stack_axes(tree: Any) -> Any:
+    """Axes analogue: prepend the (unsharded) layers axis to every leaf."""
+    return jax.tree.map(
+        lambda a: (Axes.LAYERS,) + tuple(a),
+        tree, is_leaf=lambda x: isinstance(x, tuple))

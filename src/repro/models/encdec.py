@@ -1,0 +1,229 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, T_src, d_model) which feed the encoder
+directly (a trainable projection in front).  The decoder is a standard
+causal stack with cross-attention; serving caches the encoder output's
+cross-K/V once at prefill.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.common import Axes, DTypePolicy, TreeMaker, \
+    stack_abstract, stack_axes, stack_trees
+from repro.models.layers import rms_norm, rope_freqs
+from repro.models.mlp import mlp, mlp_params
+
+__all__ = ["init_params", "param_axes", "forward", "lm_loss",
+           "init_cache", "prefill", "decode_step"]
+
+
+def _enc_layer(tm: TreeMaker, cfg):
+    d = cfg.d_model
+    return {
+        "ln1": tm.param((d,), (Axes.EMBED,), init="ones"),
+        "attn": attn_mod.attn_params(tm, cfg),
+        "ln2": tm.param((d,), (Axes.EMBED,), init="ones"),
+        "mlp": mlp_params(tm, cfg),
+    }
+
+
+def _dec_layer(tm: TreeMaker, cfg):
+    d = cfg.d_model
+    return {
+        "ln1": tm.param((d,), (Axes.EMBED,), init="ones"),
+        "self_attn": attn_mod.attn_params(tm, cfg),
+        "ln_x": tm.param((d,), (Axes.EMBED,), init="ones"),
+        "cross_attn": attn_mod.attn_params(tm, cfg),
+        "ln2": tm.param((d,), (Axes.EMBED,), init="ones"),
+        "mlp": mlp_params(tm, cfg),
+    }
+
+
+def _model_tree(cfg, tm: TreeMaker, stack):
+    d, v = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": tm.param((v, d), (Axes.VOCAB, Axes.EMBED), scale=0.02),
+        "src_proj": tm.param((d, d), (Axes.EMBED, Axes.EMBED)),
+        "enc": stack(lambda: _enc_layer(tm, cfg), cfg.enc_layers),
+        "enc_norm": tm.param((d,), (Axes.EMBED,), init="ones"),
+        "dec": stack(lambda: _dec_layer(tm, cfg), cfg.n_layers),
+        "final_norm": tm.param((d,), (Axes.EMBED,), init="ones"),
+        "lm_head": tm.param((d, v), (Axes.EMBED, Axes.VOCAB)),
+    }
+
+
+def init_params(cfg, key: Optional[jax.Array] = None, abstract: bool = False,
+                dtype_policy: Optional[DTypePolicy] = None):
+    dp = dtype_policy or DTypePolicy()
+    if abstract:
+        tm = TreeMaker("abstract", dtype_policy=dp)
+        return _model_tree(cfg, tm,
+                           lambda mk, n: stack_abstract(mk(), n))
+    tm = TreeMaker("init", key=key, dtype_policy=dp)
+    return _model_tree(cfg, tm,
+                       lambda mk, n: stack_trees([mk() for _ in range(n)]))
+
+
+def param_axes(cfg):
+    tm = TreeMaker("axes")
+    return _model_tree(cfg, tm, lambda mk, n: stack_axes(mk()))
+
+
+def _constrain(x, names):
+    from repro.distributed.sharding import constrain
+    return constrain(x, names)
+
+
+def _mask_logits(logits, cfg):
+    if cfg.padded_vocab != cfg.vocab:
+        neg = jnp.full((cfg.padded_vocab,), -1e30, logits.dtype
+                       ).at[:cfg.vocab].set(0.0)
+        logits = logits + neg
+    return logits
+
+
+def encode(params, cfg, src_embeds: jnp.ndarray) -> jnp.ndarray:
+    """src_embeds: (B, Ts, D) stub frame embeddings -> encoder output."""
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+    x = jnp.einsum("btd,de->bte",
+                   src_embeds.astype(params["src_proj"].dtype),
+                   params["src_proj"])
+    x = _constrain(x, ("batch", None, None))
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, lp):
+        h = rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        a, _ = attn_mod.attention(lp["attn"], cfg, h, positions=positions,
+                                  inv_freq=inv_freq, causal=False)
+        xc = xc + a
+        h = rms_norm(xc, lp["ln2"], cfg.norm_eps)
+        return xc + mlp(lp["mlp"], h), None
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(lp, cfg, x, *, positions, inv_freq, enc_out=None,
+               self_cache=None, cross_kv=None, cache_pos=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, new_kv = attn_mod.attention(
+        lp["self_attn"], cfg, h, positions=positions, inv_freq=inv_freq,
+        cache=self_cache, cache_pos=cache_pos)
+    x = x + a
+    h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    if cross_kv is not None:   # decode: precomputed encoder K/V
+        q = jnp.einsum("btd,dhk->bthk", h, lp["cross_attn"]["wq"])
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["cross_attn"]["q_norm"], cfg.norm_eps)
+        a = attn_mod._mha(q, cross_kv["k"].astype(q.dtype),
+                          cross_kv["v"].astype(q.dtype), None, cfg.head_dim_)
+        a = jnp.einsum("bthk,hkd->btd", a, lp["cross_attn"]["wo"])
+    else:
+        a, _ = attn_mod.attention(
+            lp["cross_attn"], cfg, h, positions=positions, inv_freq=None,
+            kv_x=enc_out)
+    x = x + a
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + mlp(lp["mlp"], h), new_kv
+
+
+def forward(params, cfg, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced enc-dec forward; returns (logits, aux=0)."""
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    tokens = batch["tokens"]
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _constrain(x, ("batch", None, None))
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, lp):
+        xc, _ = _dec_block(lp, cfg, xc, positions=positions,
+                           inv_freq=inv_freq, enc_out=enc_out)
+        return xc, None
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return _mask_logits(logits, cfg), jnp.zeros((), jnp.float32)
+
+
+def lm_loss(params, cfg, batch, aux_coef: float = 0.0):
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, src_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    kv_shape = (batch, src_len, cfg.cache_kv_heads, cfg.head_dim_)
+
+    def mk(shape):
+        return (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                else jnp.zeros(shape, dtype))
+    one = {"self": attn_mod.init_kv_cache(cfg, batch, max_len, dtype,
+                                          abstract),
+           "cross": {"k": mk(kv_shape), "v": mk(kv_shape)}}
+    return (stack_abstract(one, cfg.n_layers) if abstract
+            else stack_trees([one] * cfg.n_layers))
+
+
+def prefill(params, cfg, batch: Dict[str, jnp.ndarray], cache):
+    """Encode source, precompute cross-K/V, prefill decoder self cache."""
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    tokens = batch["tokens"]
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(x.shape[1])
+    zero = jnp.zeros((), jnp.int32)
+
+    def body(xc, xs):
+        lp, c = xs
+        k, v = attn_mod._project_kv(lp["cross_attn"], cfg, enc_out)
+        k = attn_mod._to_cache_heads(cfg, k)
+        v = attn_mod._to_cache_heads(cfg, v)
+        xc, new_kv = _dec_block(lp, cfg, xc, positions=positions,
+                                inv_freq=inv_freq, enc_out=enc_out,
+                                self_cache=c["self"], cache_pos=zero)
+        return xc, {"self": new_kv,
+                    "cross": {"k": k.astype(c["cross"]["k"].dtype),
+                              "v": v.astype(c["cross"]["v"].dtype)}}
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _mask_logits(jnp.einsum("bd,dv->bv", x[:, -1],
+                                     params["lm_head"],
+                                     preferred_element_type=jnp.float32), cfg)
+    return logits, new_cache
+
+
+def decode_step(params, cfg, token: jnp.ndarray, cache, pos: jnp.ndarray):
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    positions = pos[None]
+
+    def body(xc, xs):
+        lp, c = xs
+        xc, new_kv = _dec_block(lp, cfg, xc, positions=positions,
+                                inv_freq=inv_freq, self_cache=c["self"],
+                                cross_kv=c["cross"], cache_pos=pos)
+        return xc, {"self": new_kv, "cross": c["cross"]}
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _mask_logits(jnp.einsum("btd,dv->btv", x, params["lm_head"],
+                                     preferred_element_type=jnp.float32), cfg)
+    return logits[:, 0], new_cache

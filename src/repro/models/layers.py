@@ -1,0 +1,72 @@
+"""Primitive layers: norms, RoPE, embeddings.
+
+All functions are pure; parameter trees come from the callers' TreeMaker
+declarations.  Norms compute in fp32 (DTypePolicy.accum) and cast back.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "rope_freqs", "apply_rope",
+           "softcap", "group_rms_norm"]
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm; ``plus_one`` uses the (1+w) gemma parameterization."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    y = y * (1.0 + w) if plus_one else y * w
+    return y.astype(dt)
+
+
+def group_rms_norm(x: jnp.ndarray, weight: jnp.ndarray, groups: int,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    """Per-group RMSNorm over the last dim (RWKV6 ln_x / Mamba2 gated norm
+    use per-head normalization)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    xg = x.astype(jnp.float32).reshape(*lead, groups, d // groups)
+    var = jnp.mean(jnp.square(xg), axis=-1, keepdims=True)
+    y = (xg * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies for rotary embeddings; (head_dim // 2,) fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    angles = positions[..., :, None, None].astype(jnp.float32) \
+        * inv_freq[None, None, :]                      # (..., T, 1, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Logit soft-capping (gemma): cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)

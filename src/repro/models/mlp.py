@@ -1,0 +1,28 @@
+"""Gated MLP (SwiGLU / GeGLU) — the dense FFN block."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Axes, TreeMaker
+
+__all__ = ["mlp_params", "mlp"]
+
+
+def mlp_params(tm: TreeMaker, cfg, d_ff: int = 0) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi_gate": tm.param((d, f), (Axes.EMBED, Axes.MLP)),
+        "wi_up": tm.param((d, f), (Axes.EMBED, Axes.MLP)),
+        "wo": tm.param((f, d), (Axes.MLP, Axes.EMBED)),
+    }
+
+
+def mlp(p: Dict[str, Any], x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    gate = jnp.einsum("btd,df->btf", x, p["wi_gate"])
+    up = jnp.einsum("btd,df->btf", x, p["wi_up"])
+    a = jax.nn.gelu(gate, approximate=True) if act == "gelu" \
+        else jax.nn.silu(gate)
+    return jnp.einsum("btf,fd->btd", a * up, p["wo"])

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with GShard-style
+einsum dispatch (+ optional always-on shared experts, qwen2-moe style).
+
+Expert parallelism is the paper's Image-Block idea at mesh scale: experts
+are the depth-partition (each device's expert group = one Image Block),
+tokens are the streamed folds, and the dispatch/combine all-to-alls play
+the multicast / partial-sum-return messages (DESIGN.md §6).
+
+Implementation notes
+* Tokens are processed in groups of ``group_size`` so the dispatch one-hot
+  (G, S, E, C) stays small; C = ceil(S * top_k * cf / E).
+* The expert dim is padded to a multiple of the ``model`` mesh axis so EP
+  sharding divides evenly (dead experts get -inf router logits).
+* ``capacity_factor >= n_experts/top_k`` makes routing lossless (used by the
+  correctness tests); production default 1.25 drops overflow tokens, like
+  GShard/Switch.
+* The router computes in fp32; an auxiliary load-balance loss is returned.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Axes, TreeMaker
+from repro.models.mlp import mlp, mlp_params
+
+__all__ = ["moe_params", "moe_ffn", "padded_experts"]
+
+
+def padded_experts(cfg, multiple: int = 16) -> int:
+    e = cfg.n_experts
+    return (e + multiple - 1) // multiple * multiple
+
+
+def moe_params(tm: TreeMaker, cfg) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    e = padded_experts(cfg)
+    p = {
+        "router": tm.param((d, e), (Axes.EMBED, Axes.EXPERTS),
+                           dtype=jnp.float32),
+        "wi_gate": tm.param((e, d, f), (Axes.EXPERTS, Axes.EMBED, Axes.EXPERT_MLP)),
+        "wi_up": tm.param((e, d, f), (Axes.EXPERTS, Axes.EMBED, Axes.EXPERT_MLP)),
+        "wo": tm.param((e, f, d), (Axes.EXPERTS, Axes.EXPERT_MLP, Axes.EMBED)),
+    }
+    if cfg.shared_experts:
+        p["shared"] = mlp_params(tm, cfg, d_ff=cfg.shared_experts * f)
+    return p
+
+
+def moe_ffn(p: Dict[str, Any], cfg, x: jnp.ndarray, *,
+            group_size: int = 512,
+            capacity_factor: float = 1.25,
+            renorm_topk: bool = True,
+            dispatch_dtype=None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, D) -> (out (B, T, D), aux load-balance loss scalar).
+
+    dispatch_dtype: dtype of the dispatch/combine one-hot tensors and their
+    einsums.  fp32 is the faithful-GShard baseline; bf16 halves the
+    dominant dispatch traffic and all-to-all payloads at no routing loss
+    (the gates stay fp32 until the final cast) — EXPERIMENTS.md §Perf.
+    """
+    b, t, d = x.shape
+    e = p["router"].shape[1]
+    k = cfg.top_k
+    n = b * t
+    gs = min(group_size, t)
+    assert (n % gs) == 0, (n, gs)
+    g = n // gs
+    # capacity w.r.t. REAL experts — dead padded experts receive nothing
+    cap = max(int(gs * k * capacity_factor / cfg.n_experts), 1)
+    cap = min(cap, gs)
+
+    xf = x.reshape(g, gs, d)
+    logits = jnp.einsum("gsd,de->gse", xf.astype(jnp.float32), p["router"])
+    # dead padded experts never get routed to
+    if e > cfg.n_experts:
+        neg = jnp.full((e,), -1e30, jnp.float32).at[:cfg.n_experts].set(0.0)
+        logits = logits + neg
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,S,E)
+    topk_p, topk_i = jax.lax.top_k(probs, k)                   # (G,S,K)
+    if renorm_topk:
+        topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)
+
+    # position of each (token, k) inside its expert's capacity buffer
+    sel = jax.nn.one_hot(topk_i, e, dtype=jnp.float32)         # (G,S,K,E)
+    # rank among this expert's selections, scanning tokens then k-slots
+    flat = sel.reshape(g, gs * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, gs, k, e)
+    pos = jnp.sum(pos * sel, axis=-1)                          # (G,S,K)
+    keep = pos < cap
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    dd = dispatch_dtype or jnp.float32
+    gate = topk_p * keep                                       # (G,S,K)
+    cap_oh = jax.nn.one_hot(pos, cap, dtype=dd)                # (G,S,K,C)
+    seld = sel.astype(dd)
+    # dispatch: (G,S,E,C) boolean-ish; combine carries the gate weight
+    dispatch = jnp.einsum("gske,gskc->gsec", seld,
+                          cap_oh * keep[..., None].astype(dd))
+    combine = jnp.einsum("gske,gskc->gsec",
+                         seld * gate[..., None].astype(dd), cap_oh)
+
+    cd = x.dtype
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(cd), xf)  # all-to-all
+    if getattr(cfg, "moe_ep_constraint", False):
+        from repro.distributed.sharding import constrain
+        xe = constrain(xe, ("experts", "batch", None, None))
+    hg = jnp.einsum("egcd,edf->egcf", xe, p["wi_gate"])
+    hu = jnp.einsum("egcd,edf->egcf", xe, p["wi_up"])
+    he = jnp.einsum("egcf,efd->egcd", jax.nn.silu(hg) * hu, p["wo"])
+    if getattr(cfg, "moe_ep_constraint", False):
+        from repro.distributed.sharding import constrain
+        he = constrain(he, ("experts", "batch", None, None))
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(cd), he)  # all-to-all
+
+    if cfg.shared_experts:
+        out = out + mlp(p["shared"], xf)
+
+    # Switch/GShard load-balance aux loss (fp32)
+    density = jnp.mean(sel.sum(2), axis=1)            # (G,E) frac routed
+    prob_mean = jnp.mean(probs, axis=1)               # (G,E)
+    aux = jnp.mean(jnp.sum(density * prob_mean, axis=-1)) * (e ** 1)
+    return out.reshape(b, t, d), aux

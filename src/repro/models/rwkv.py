@@ -1,0 +1,192 @@
+"""RWKV-6 ("Finch") block — attention-free linear RNN with data-dependent
+decay (used by rwkv6-1.6b).
+
+Faithful pieces: ddlerp token-shift (LoRA-modulated mixing), data-dependent
+per-channel decay w_t = exp(-exp(.)), the per-channel bonus u, the WKV6
+matrix-state recurrence S <- diag(w) S + k^T v, per-head group-norm, and the
+squared-ReLU channel-mix.
+
+The WKV core is an exact ``lax.scan`` over time (state (B,H,hd,hd) in fp32).
+A chunked-parallel form exists but its within-chunk factorization
+exp(-cumsum(log w)) is unbounded for data-dependent vector decay; the scan
+is the numerically-exact reference and decode is O(1) regardless.  (The
+Pallas chunked kernel is listed as a hillclimb candidate in EXPERIMENTS.md.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Axes, TreeMaker
+from repro.models.layers import group_rms_norm
+
+__all__ = ["rwkv_params", "rwkv_time_mix", "rwkv_channel_mix",
+           "init_rwkv_cache"]
+
+_LORA_MIX = 32
+_LORA_DECAY = 64
+
+
+def rwkv_params(tm: TreeMaker, cfg) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.head_dim_
+    return {
+        # time-mix (wkv)
+        "mu_x": tm.param((d,), (Axes.EMBED,), init="zeros"),
+        "mu": tm.param((5, d), (None, Axes.EMBED), init="zeros"),
+        "tm_w1": tm.param((d, 5 * _LORA_MIX), (Axes.EMBED, None),
+                          scale=0.01),
+        "tm_w2": tm.param((5, _LORA_MIX, d), (None, None, Axes.EMBED),
+                          scale=0.01),
+        "td_w1": tm.param((d, _LORA_DECAY), (Axes.EMBED, None), scale=0.01),
+        "td_w2": tm.param((_LORA_DECAY, d), (None, Axes.EMBED), scale=0.01),
+        "decay_base": tm.param((d,), (Axes.EMBED,), init="zeros",
+                               dtype=jnp.float32),
+        "u": tm.param((h, hd), (Axes.HEADS, Axes.HEAD_DIM), init="zeros",
+                      dtype=jnp.float32),
+        "wr": tm.param((d, d), (Axes.EMBED, Axes.HEADS)),
+        "wk": tm.param((d, d), (Axes.EMBED, Axes.HEADS)),
+        "wv": tm.param((d, d), (Axes.EMBED, Axes.HEADS)),
+        "wg": tm.param((d, d), (Axes.EMBED, Axes.HEADS)),
+        "wo": tm.param((d, d), (Axes.HEADS, Axes.EMBED)),
+        "ln_x": tm.param((d,), (Axes.EMBED,), init="ones"),
+        # channel-mix
+        "cmu_k": tm.param((d,), (Axes.EMBED,), init="zeros"),
+        "cmu_r": tm.param((d,), (Axes.EMBED,), init="zeros"),
+        "ck": tm.param((d, f), (Axes.EMBED, Axes.MLP)),
+        "cv": tm.param((f, d), (Axes.MLP, Axes.EMBED)),
+        "cr": tm.param((d, d), (Axes.EMBED, Axes.HEADS)),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} stream: right-shift by one; ``last`` seeds t=0 (decode)."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, dx):
+    """Data-dependent lerp: five mixed streams (w,k,v,r,g)."""
+    base = x + dx * p["mu_x"]
+    lora = jnp.tanh(jnp.einsum("btd,dk->btk", base, p["tm_w1"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, _LORA_MIX)
+    off = jnp.einsum("btsk,skd->bstd", lora, p["tm_w2"])       # (B,5,T,D)
+    mix = p["mu"][None, :, None, :] + off
+    return x[:, None] + dx[:, None] * mix                      # (B,5,T,D)
+
+
+def _wkv_scan(r, k, v, w, u, s0, chunk: int = 16):
+    """Exact WKV6 recurrence, chunked.
+
+    r,k,v,w: (B,T,H,hd) — w is the decay in (0,1).  u: (H,hd).
+    s0: (B,H,hd,hd) fp32 [k-dim x v-dim].  Returns (out (B,T,H,hd), s_f).
+
+    Chunking (EXPERIMENTS.md §Perf, rwkv6 iteration): the outer scan runs
+    over T/chunk steps with the ``chunk`` inner steps unrolled inside a
+    ``jax.checkpoint(nothing_saveable)`` region — residuals are saved per
+    CHUNK, not per step, and the backward recomputes within the chunk.
+    This cuts the scan-residual machinery (the dominant memory-term source
+    for rwkv6 train) by ~chunk x while keeping the recurrence exact.
+    (A fully parallel within-chunk form exists but its exp(-cumsum(log w))
+    factorization is unbounded for data-dependent vector decay.)
+    """
+    b, t, h, hd = r.shape
+    r32, k32, v32, w32 = (a.astype(jnp.float32) for a in (r, k, v, w))
+    if t % chunk:
+        chunk = 1
+
+    def inner(s, args):
+        rt, kt, vt, wt = args                           # (B,H,hd)
+        kv = jnp.einsum("bhc,bhd->bhcd", kt, vt)
+        out = jnp.einsum("bhc,bhcd->bhd", rt, s + u[None, :, :, None] * kv)
+        s = s * wt[..., None] + kv
+        return s, out
+
+    if chunk == 1:
+        xs = tuple(a.transpose(1, 0, 2, 3) for a in (r32, k32, v32, w32))
+        sf, out = jax.lax.scan(inner, s0, xs)
+        return out.transpose(1, 0, 2, 3), sf
+
+    nc = t // chunk
+
+    def csplit(a):  # (B,T,H,hd) -> (nc, chunk, B, H, hd)
+        return a.reshape(b, nc, chunk, h, hd).transpose(1, 2, 0, 3, 4)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_body(s, xs):
+        rc, kc, vc, wc = xs                             # (chunk, B, H, hd)
+        outs = []
+        for i in range(rc.shape[0]):                    # unrolled
+            s, o = inner(s, (rc[i], kc[i], vc[i], wc[i]))
+            outs.append(o)
+        return s, jnp.stack(outs)
+
+    xs = tuple(csplit(a) for a in (r32, k32, v32, w32))
+    sf, out = jax.lax.scan(chunk_body, s0, xs)
+    out = out.transpose(2, 0, 1, 3, 4).reshape(b, t, h, hd)
+    return out, sf
+
+
+def rwkv_time_mix(p: Dict[str, Any], cfg, x: jnp.ndarray, *,
+                  last_x: Optional[jnp.ndarray] = None,
+                  s0: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,T,D) -> (out, s_final, x_last)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    xprev = _token_shift(x, last_x)
+    dx = xprev - x
+    xw, xk, xv, xr, xg = [m[:, 0] for m in
+                          jnp.split(_ddlerp(p, x, dx), 5, axis=1)]
+    # data-dependent decay (fp32): w = exp(-exp(base + lora))
+    dd = p["decay_base"] + jnp.einsum(
+        "btk,kd->btd", jnp.tanh(jnp.einsum("btd,dk->btk",
+                                           xw.astype(jnp.float32),
+                                           p["td_w1"].astype(jnp.float32))),
+        p["td_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dd)).reshape(b, t, h, hd)
+    r = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(b, t, h, hd)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(b, t, h, hd)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(b, t, h, hd)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"]))
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    out, sf = _wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), s0)
+    out = out.reshape(b, t, d).astype(x.dtype)
+    out = group_rms_norm(out, p["ln_x"], groups=h, eps=cfg.norm_eps * 64)
+    out = jnp.einsum("bte,ed->btd", out * g, p["wo"])
+    return out, sf, x[:, -1, :]
+
+
+def rwkv_channel_mix(p: Dict[str, Any], cfg, x: jnp.ndarray, *,
+                     last_x: Optional[jnp.ndarray] = None,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Squared-ReLU channel mix.  Returns (out, x_last)."""
+    xprev = _token_shift(x, last_x)
+    dx = xprev - x
+    xk = x + dx * p["cmu_k"]
+    xr = x + dx * p["cmu_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["ck"])))
+    vv = jnp.einsum("btf,fd->btd", kk, p["cv"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cr"]))
+    return rr * vv, x[:, -1, :]
+
+
+def init_rwkv_cache(cfg, batch: int, dtype=jnp.bfloat16,
+                    abstract: bool = False):
+    h, hd, d = cfg.n_heads, cfg.head_dim_, cfg.d_model
+    shapes = {
+        "s": ((batch, h, hd, hd), jnp.float32),
+        "x_tm": ((batch, d), dtype),
+        "x_cm": ((batch, d), dtype),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()}

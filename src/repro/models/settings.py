@@ -1,0 +1,62 @@
+"""Trace-time model settings (remat policy, attention impl) — set by step
+builders."""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_REMAT = "none"       # none | full | dots
+_ATTN = "naive"       # naive | blockwise (flash-style online softmax)
+
+
+def set_attn_impl(mode: str) -> None:
+    global _ATTN
+    assert mode in ("naive", "blockwise"), mode
+    _ATTN = mode
+
+
+def get_attn_impl() -> str:
+    return _ATTN
+
+
+@contextlib.contextmanager
+def attn_impl(mode: str):
+    global _ATTN
+    old = _ATTN
+    set_attn_impl(mode)
+    try:
+        yield
+    finally:
+        _ATTN = old
+
+
+def set_remat(mode: str) -> None:
+    global _REMAT
+    assert mode in ("none", "full", "dots"), mode
+    _REMAT = mode
+
+
+def get_remat() -> str:
+    return _REMAT
+
+
+@contextlib.contextmanager
+def remat(mode: str):
+    global _REMAT
+    old = _REMAT
+    _REMAT = mode
+    try:
+        yield
+    finally:
+        _REMAT = old
+
+
+def maybe_remat(fn):
+    """Wrap a scan body with the active checkpoint policy."""
+    if _REMAT == "full":
+        return jax.checkpoint(fn)
+    if _REMAT == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn

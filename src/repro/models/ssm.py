@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) block — used by zamba2-1.2b.
+
+The selective-state-space layer with scalar-per-head decay, computed with
+the *chunked* SSD algorithm: intra-chunk work is fully parallel (the decay
+matrix exp(cum_t - cum_s) is bounded in (0, 1], so the parallel form is
+numerically safe), inter-chunk state is carried by a short ``lax.scan`` over
+T/chunk steps.  The causal depthwise conv1d in front of (x, B, C) is the
+paper's 1-D fold specialization (``kernels/conv1d_causal.py``).
+
+Decode is O(1) in sequence length: cache = {conv tail (K-1 tokens), SSD
+state (H, state, head_dim)}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import conv1d_causal
+from repro.models.common import Axes, TreeMaker
+from repro.models.layers import group_rms_norm
+
+__all__ = ["mamba_params", "mamba_block", "mamba_decode", "init_mamba_cache"]
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_in, heads, conv_dim
+
+
+def mamba_params(tm: TreeMaker, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_in, heads, conv_dim = _dims(cfg)
+    gs = cfg.ssm_groups * cfg.ssm_state
+    return {
+        "wz": tm.param((d, d_in), (Axes.EMBED, Axes.SSM_INNER)),
+        "wx": tm.param((d, d_in), (Axes.EMBED, Axes.SSM_INNER)),
+        "wB": tm.param((d, gs), (Axes.EMBED, Axes.STATE)),
+        "wC": tm.param((d, gs), (Axes.EMBED, Axes.STATE)),
+        "wdt": tm.param((d, heads), (Axes.EMBED, Axes.HEADS)),
+        "dt_bias": tm.param((heads,), (Axes.HEADS,), init="ssm_dt",
+                            dtype=jnp.float32),
+        "A_log": tm.param((heads,), (Axes.HEADS,), init="ssm_a",
+                          dtype=jnp.float32),
+        "D": tm.param((heads,), (Axes.HEADS,), init="ones",
+                      dtype=jnp.float32),
+        "conv_w": tm.param((cfg.ssm_conv, conv_dim), (Axes.CONV_K, Axes.SSM_INNER)),
+        "norm": tm.param((d_in,), (Axes.SSM_INNER,), init="ones"),
+        "wo": tm.param((d_in, d), (Axes.SSM_INNER, Axes.EMBED)),
+    }
+
+
+def _ssd_chunked(xh, dt, a_log, B, C, h0, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,T,H,hd)  dt: (B,T,H) fp32  a_log = A*dt: (B,T,H) fp32 (<0)
+    B, C: (B,T,G,state) (G broadcast over heads)
+    h0: (B,H,state,hd) fp32 initial state.
+    Returns y (B,T,H,hd), h_final.
+    """
+    b, t, h, hd = xh.shape
+    g = B.shape[2]
+    s = B.shape[3]
+    nc = t // chunk
+    rep = h // g
+
+    def csplit(x):  # (B,T,...) -> (B,nc,L,...)
+        return x.reshape(b, nc, chunk, *x.shape[2:])
+
+    xh_, dt_, la_, B_, C_ = map(csplit, (xh, dt, a_log, B, C))
+    Bh = jnp.repeat(B_, rep, axis=3)         # (B,nc,L,H?,s) via group->heads
+    Ch = jnp.repeat(C_, rep, axis=3)
+    cum = jnp.cumsum(la_, axis=2)            # (B,nc,L,H)
+    # decay from step s (exclusive) to step t (inclusive): exp(cum_t - cum_s)
+    dmat = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(mask[None, None, :, :, None], dmat, 0.0)
+    cb = jnp.einsum("bnlhs,bnmhs->bnlmh", Ch, Bh,
+                    preferred_element_type=jnp.float32)           # C_t . B_s
+    scores = cb * dmat * dt_[:, :, None, :, :]                    # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bnlmh,bnmhd->bnlhd", scores,
+                         xh_.astype(jnp.float32))
+    # inter-chunk: scan over chunks carrying h (B,H,s,hd)
+    dec_in = jnp.exp(cum)                                         # to chunk end
+    # state ingest weights: exp(cum_L - cum_s) * dt_s
+    wL = jnp.exp(cum[:, :, -1:, :] - cum) * dt_                   # (B,nc,L,H)
+
+    def body(hprev, args):
+        xc, Bc, Cc, dinc, wc, lac = args
+        # y_inter_t = C_t . (exp(cum_t) h_prev)
+        y_int = jnp.einsum("blhs,bhsd->blhd", Cc * dinc[..., None],
+                           hprev)
+        dh = jnp.einsum("blhs,blhd->bhsd", Bc * wc[..., None],
+                        xc.astype(jnp.float32))
+        hnew = hprev * jnp.exp(lac.sum(1))[:, :, None, None] + dh
+        return hnew, y_int
+
+    xs = (xh_.transpose(1, 0, 2, 3, 4), Bh.transpose(1, 0, 2, 3, 4),
+          Ch.transpose(1, 0, 2, 3, 4), dec_in.transpose(1, 0, 2, 3),
+          wL.transpose(1, 0, 2, 3), la_.transpose(1, 0, 2, 3))
+    hf, y_inter = jax.lax.scan(body, h0, xs)
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    return y.reshape(b, t, h, hd), hf
+
+
+def mamba_block(p: Dict[str, Any], cfg, x: jnp.ndarray, *,
+                chunk: int = 64,
+                h0: Optional[jnp.ndarray] = None,
+                conv_init: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence Mamba2 mixer.  x: (B,T,D) -> (y (B,T,D), h_f, conv_tail)."""
+    b, t, d = x.shape
+    d_in, heads, conv_dim = _dims(cfg)
+    g, s = cfg.ssm_groups, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    if t % chunk:
+        chunk = 1 if t < chunk else max(c for c in (1, 2, 4, 8, 16, 32, 64)
+                                        if t % c == 0)
+
+    z = jnp.einsum("btd,di->bti", x, p["wz"])
+    xin = jnp.einsum("btd,di->bti", x, p["wx"])
+    Bp = jnp.einsum("btd,ds->bts", x, p["wB"])
+    Cp = jnp.einsum("btd,ds->bts", x, p["wC"])
+    dt = jnp.einsum("btd,dh->bth", x.astype(jnp.float32),
+                    p["wdt"].astype(jnp.float32)) + p["dt_bias"]
+    dt = jax.nn.softplus(dt)                                   # (B,T,H) fp32
+
+    conv_in = jnp.concatenate([xin, Bp, Cp], axis=-1)
+    if conv_init is not None:
+        conv_in = jnp.concatenate([conv_init, conv_in], axis=1)
+    conv_out = jax.nn.silu(conv1d_causal(conv_in, p["conv_w"]))
+    conv_tail = conv_in[:, -(cfg.ssm_conv - 1):, :]
+    if conv_init is not None:
+        conv_out = conv_out[:, cfg.ssm_conv - 1:, :]
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + g * s], axis=-1)
+
+    xh = xc.reshape(b, t, heads, hd)
+    Bc = Bc.reshape(b, t, g, s).astype(jnp.float32)
+    Cc = Cc.reshape(b, t, g, s).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                   # (H,) < 0
+    a_log = dt * A                                             # (B,T,H)
+    if h0 is None:
+        h0 = jnp.zeros((b, heads, s, hd), jnp.float32)
+    y, hf = _ssd_chunked(xh, dt, a_log, Bc, Cc, h0, chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = group_rms_norm(y * jax.nn.silu(z), p["norm"], groups=heads,
+                       eps=cfg.norm_eps)
+    return jnp.einsum("bti,id->btd", y, p["wo"]), hf, conv_tail
+
+
+def mamba_decode(p: Dict[str, Any], cfg, x: jnp.ndarray,
+                 cache: Dict[str, jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token step.  x: (B,1,D); cache = {"conv": (B,K-1,convdim),
+    "h": (B,H,state,hd)}."""
+    b = x.shape[0]
+    d_in, heads, conv_dim = _dims(cfg)
+    g, s, hd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+
+    z = jnp.einsum("btd,di->bti", x, p["wz"])
+    xin = jnp.einsum("btd,di->bti", x, p["wx"])
+    Bp = jnp.einsum("btd,ds->bts", x, p["wB"])
+    Cp = jnp.einsum("btd,ds->bts", x, p["wC"])
+    dt = jnp.einsum("btd,dh->bth", x.astype(jnp.float32),
+                    p["wdt"].astype(jnp.float32)) + p["dt_bias"]
+    dt = jax.nn.softplus(dt)[:, 0]                             # (B,H)
+
+    conv_in = jnp.concatenate([xin, Bp, Cp], axis=-1)          # (B,1,convdim)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,convdim)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]))         # (B,convdim)
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + g * s], axis=-1)
+    xh = xc.reshape(b, heads, hd).astype(jnp.float32)
+    Bc = Bc.reshape(b, g, s).astype(jnp.float32).repeat(heads // g, axis=1)
+    Cc = Cc.reshape(b, g, s).astype(jnp.float32).repeat(heads // g, axis=1)
+
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                        # (B,H)
+    h = cache["h"] * a[:, :, None, None] \
+        + jnp.einsum("bhs,bhd->bhsd", Bc * dt[..., None], xh)
+    y = jnp.einsum("bhs,bhsd->bhd", Cc, h)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = group_rms_norm(y * jax.nn.silu(z), p["norm"], groups=heads,
+                       eps=cfg.norm_eps)
+    out = jnp.einsum("bti,id->btd", y, p["wo"])
+    return out, {"conv": window[:, 1:], "h": h}
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16,
+                     abstract: bool = False):
+    d_in, heads, conv_dim = _dims(cfg)
+    shapes = {
+        "conv": ((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "h": ((batch, heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+    return {k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()}

@@ -1,0 +1,84 @@
+"""VGG-16 — the paper's end-to-end evaluation model (Table 2B), built on the
+fold-streamed convolution kernels.
+
+Every conv layer runs through ``repro.kernels.ops.conv2d`` so the whole
+network exercises the paper's Filter-Fold/Image-Fold dataflow (impl
+selectable: fold_ws / fold_os Pallas, im2col GEMM baseline, direct).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import conv2d
+from repro.models.common import Axes, TreeMaker
+
+__all__ = ["VGG_LAYERS", "init_params", "forward", "n_classes"]
+
+# (name, in_ch, out_ch) conv3x3 blocks; "M" = 2x2 maxpool (paper Table 2B)
+VGG_LAYERS: Tuple = (
+    ("conv1_1", 3, 64), ("conv1_2", 64, 64), "M",
+    ("conv2_1", 64, 128), ("conv2_2", 128, 128), "M",
+    ("conv3_1", 128, 256), ("conv3_2", 256, 256), ("conv3_3", 256, 256), "M",
+    ("conv4_1", 256, 512), ("conv4_2", 512, 512), ("conv4_3", 512, 512), "M",
+    ("conv5_1", 512, 512), ("conv5_2", 512, 512), ("conv5_3", 512, 512), "M",
+)
+n_classes = 1000
+
+
+def init_params(key: jax.Array, *, width_mult: float = 1.0,
+                img: int = 224, classes: int = n_classes,
+                dtype=jnp.float32) -> Dict[str, Any]:
+    from repro.models.common import DTypePolicy
+    tm = TreeMaker("init", key=key,
+                   dtype_policy=DTypePolicy(param=dtype, compute=dtype))
+    p: Dict[str, Any] = {}
+    pools = 0
+    for entry in VGG_LAYERS:
+        if entry == "M":
+            pools += 1
+            continue
+        name, cin, cout = entry
+        cin = max(int(cin * width_mult), 1) if cin != 3 else 3
+        cout = max(int(cout * width_mult), 1)
+        p[name] = {
+            "w": tm.param((cout, cin, 3, 3),
+                          (Axes.HEADS, Axes.EMBED, None, None)),
+            "b": tm.param((cout,), (Axes.HEADS,), init="zeros"),
+        }
+    feat = img // (2 ** pools)
+    last = max(int(512 * width_mult), 1)
+    fc_dim = max(int(4096 * width_mult), 8)
+    p["fc1"] = {"w": tm.param((last * feat * feat, fc_dim),
+                              (Axes.EMBED, Axes.MLP)),
+                "b": tm.param((fc_dim,), (Axes.MLP,), init="zeros")}
+    p["fc2"] = {"w": tm.param((fc_dim, fc_dim), (Axes.MLP, Axes.MLP)),
+                "b": tm.param((fc_dim,), (Axes.MLP,), init="zeros")}
+    p["fc3"] = {"w": tm.param((fc_dim, classes), (Axes.MLP, Axes.VOCAB)),
+                "b": tm.param((classes,), (Axes.VOCAB,), init="zeros")}
+    return p
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def forward(params: Dict[str, Any], x: jnp.ndarray,
+            impl: Optional[str] = None) -> jnp.ndarray:
+    """x: (N, 3, H, W) NCHW -> (N, classes) logits."""
+    for entry in VGG_LAYERS:
+        if entry == "M":
+            x = _maxpool2(x)
+            continue
+        name = entry[0]
+        w, b = params[name]["w"], params[name]["b"]
+        x = conv2d(x, w, stride=1, pad=1, impl=impl)
+        x = jax.nn.relu(x + b[None, :, None, None])
+    n = x.shape[0]
+    x = x.reshape(n, -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]

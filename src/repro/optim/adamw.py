@@ -1,0 +1,102 @@
+"""AdamW with fp32 master weights, global-norm clipping, and ZeRO-1-ready
+state layout (sharding of moments/master over the DP axes is applied by
+``distributed.sharding.zero1_shardings`` — the math here is sharding-
+agnostic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "abstract_opt_state",
+           "opt_state_axes", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": f32(params),
+        "nu": f32(params),
+        "master": jax.tree.map(lambda x: x.astype(jnp.float32), params),
+    }
+
+
+def abstract_opt_state(abstract_params) -> Dict[str, Any]:
+    """ShapeDtypeStruct mirror for the dry-run (no allocation)."""
+    f32 = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "mu": f32(abstract_params),
+        "nu": f32(abstract_params),
+        "master": f32(abstract_params),
+    }
+
+
+def opt_state_axes(param_axes_tree) -> Dict[str, Any]:
+    """Logical axes for the opt state (same layout as params)."""
+    return {
+        "step": (),
+        "mu": param_axes_tree,
+        "nu": param_axes_tree,
+        "master": param_axes_tree,
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.schedule(step) if cfg.schedule is not None else cfg.lr
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12)) \
+        if cfg.grad_clip > 0 else 1.0
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master, p):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        new_master = master - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return mu, nu, new_master, new_master.astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(*args) for args in zip(flat_g, flat_mu, flat_nu, flat_ma,
+                                      flat_p)]
+    new_state = {
+        "step": step,
+        "mu": jax.tree.unflatten(treedef, [o[0] for o in out]),
+        "nu": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "master": jax.tree.unflatten(treedef, [o[2] for o in out]),
+    }
+    new_params = jax.tree.unflatten(treedef, [o[3] for o in out])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr * jnp.ones(())}

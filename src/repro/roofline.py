@@ -1,0 +1,219 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = flops_per_device / peak_flops_per_chip
+    memory term     = bytes_per_device / hbm_bw_per_chip
+    collective term = effective collective bytes per device / ici link bw
+
+``cost_analysis()``/``memory_analysis()`` on an SPMD-compiled module are
+*per-device* (verified empirically: flops == global/chips), so all three
+terms use per-chip hardware constants directly.
+
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO text
+and sum result-shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute, scaled by the ring-cost
+factor for the op and its replica-group size g:
+
+    all-reduce      2*(g-1)/g      (reduce-scatter + all-gather)
+    all-gather      (g-1)/g        (result bytes already include the g x
+                                    growth, so wire bytes ~= result*(g-1)/g)
+    reduce-scatter  (g-1)/g  (on operand bytes ~= result*g -> result*(g-1))
+    all-to-all      (g-1)/g
+    collective-permute  1
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["HW", "TPU_V5E", "CollectiveStats", "parse_collectives",
+           "roofline_terms", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # B/s per chip
+    ici_bw: float              # B/s per link
+
+
+TPU_V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>[^=]*?)\s*(?P<op>all-reduce-start|all-reduce|"
+    r"all-gather-start|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute-start|collective-permute)\(")
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+_RING_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: float(g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-to-all": lambda g: float(g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: Dict[str, int]
+    result_bytes: Dict[str, float]      # raw result-shape bytes per device
+    wire_bytes: Dict[str, float]        # ring-factor scaled
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {"count": self.count, "result_bytes": self.result_bytes,
+                "wire_bytes": self.wire_bytes,
+                "total_wire_bytes": self.total_wire_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    count: Dict[str, int] = {}
+    rbytes: Dict[str, float] = {}
+    wbytes: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op").replace("-start", "")
+        b = _shape_bytes(m.group("shapes"))
+        g = _group_size(line)
+        count[op] = count.get(op, 0) + 1
+        rbytes[op] = rbytes.get(op, 0.0) + b
+        wbytes[op] = wbytes.get(op, 0.0) + b * _RING_FACTOR[op](max(g, 2))
+    return CollectiveStats(count=count, result_bytes=rbytes,
+                           wire_bytes=wbytes)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_wire_bytes: float
+    collectives: CollectiveStats
+    hw: HW
+    model_flops: float = 0.0          # 6*N*D (global, analytic)
+    chips: int = 1
+    xla_cost_analysis: Optional[dict] = None   # unscaled, for reference
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_wire_bytes / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * per-dev HLO flops) — remat/redundancy."""
+        total = self.flops_per_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the bound: how close the dominant-term
+        time is to the time the model FLOPs alone would need at peak."""
+        ideal = self.model_flops / (self.chips * self.hw.peak_flops)
+        return ideal / self.bound_time if self.bound_time else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_wire_bytes_per_dev": self.coll_wire_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives.as_dict(),
+            "chips": self.chips,
+            "hw": self.hw.name,
+            "xla_cost_analysis": self.xla_cost_analysis,
+        }
+
+
+def roofline_terms(compiled, *, chips: int, model_flops: float = 0.0,
+                   hw: HW = TPU_V5E,
+                   hlo_text: Optional[str] = None) -> RooflineReport:
+    """Prefer the loop-scaling HLO walker (``repro.hlo_cost``):
+    ``cost_analysis()`` counts ``while`` (scan) bodies once, which
+    undercounts every layer-stacked model by ~n_layers x.  The raw
+    cost_analysis numbers are kept in the report as a cross-check."""
+    from repro.hlo_cost import analyze_hlo
+    ca = compiled.cost_analysis()
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    bytes_all = None
+    try:
+        hc = analyze_hlo(text)
+        flops, byts, bytes_all = hc.flops, hc.bytes_hbm, hc.bytes_all
+        colls = CollectiveStats(
+            count={k: int(v) for k, v in (hc.coll_counts or {}).items()},
+            result_bytes={"all": hc.coll_result_bytes},
+            wire_bytes={"all": hc.coll_wire_bytes})
+    except Exception:
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        colls = parse_collectives(text)
+    rep = RooflineReport(flops_per_dev=flops, bytes_per_dev=byts,
+                         coll_wire_bytes=colls.total_wire_bytes,
+                         collectives=colls, hw=hw,
+                         model_flops=model_flops, chips=chips)
+    rep.xla_cost_analysis = {"flops": float(ca.get("flops", 0.0)),
+                             "bytes_accessed":
+                                 float(ca.get("bytes accessed", 0.0)),
+                             "bytes_all_upper_bound": bytes_all}
+    return rep

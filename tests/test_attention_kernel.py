@@ -1,0 +1,58 @@
+"""Pallas fold-attention kernel vs the jnp oracle: shape/dtype/GQA sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention_fold import flash_attention_folded
+from repro.models.attention import _mha, make_mask
+
+CASES = [
+    # (B, T, H, KV, hd, causal, window, qblk, kblk)
+    (2, 64, 8, 2, 16, True, 0, 16, 16),
+    (1, 48, 4, 4, 32, True, 12, 16, 8),
+    (2, 32, 6, 3, 16, False, 0, 8, 16),
+    (1, 128, 2, 1, 64, True, 0, 32, 64),   # MQA
+    (1, 33, 4, 2, 16, True, 0, 16, 16),    # non-multiple T -> block shrink
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_fold_attention_matches_oracle(case):
+    b, t, h, kv, hd, causal, window, qb, kb = case
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (b, t, h, hd))
+    k = jax.random.normal(ks[1], (b, t, kv, hd))
+    v = jax.random.normal(ks[2], (b, t, kv, hd))
+    pos = jnp.arange(t)
+    mask = make_mask(pos, pos, causal=causal, window=window)
+    ref = _mha(q, k, v, mask, hd)
+    out = flash_attention_folded(q, k, v, causal=causal, window=window,
+                                 q_block=qb, k_block=kb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fold_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 32, 4, 16)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 32, 2, 16)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 32, 2, 16)).astype(dtype)
+    pos = jnp.arange(32)
+    ref = _mha(q, k, v, make_mask(pos, pos), 16)
+    out = flash_attention_folded(q, k, v, q_block=8, k_block=8)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol,
+                               atol=tol)
+
+
+def test_fold_attention_vmem_budget():
+    """The fold plan keeps the working set in VMEM: q/k/v blocks + scratch
+    must fit well under 16 MiB at production block sizes."""
+    qb = kb = 256
+    hd = 128
+    working = (qb * hd + 2 * kb * hd) * 4 + (qb + qb + qb * hd) * 4 \
+        + qb * kb * 4                      # scores tile
+    assert working < 2 * 1024 * 1024       # per-step working set << VMEM

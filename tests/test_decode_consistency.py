@@ -1,0 +1,58 @@
+"""Serving correctness: step-by-step decode must reproduce teacher-forced
+forward logits (fp32, lossless MoE capacity)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import api
+from repro.models.common import DTypePolicy
+
+FAMS = ["qwen3-4b", "gemma3-12b", "rwkv6-1.6b", "zamba2-1.2b",
+        "granite-moe-1b-a400m", "seamless-m4t-medium"]
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.is_moe:   # lossless routing so forward == decode routing
+        cfg = dataclasses.replace(
+            cfg, moe_capacity_factor=float(cfg.n_experts))
+    params = api.init_params(cfg, jax.random.PRNGKey(0),
+                             dtype_policy=DTypePolicy.fp32())
+    B, S, K = 2, 12, 6
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab
+                                ).astype(jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.is_encdec:
+        batch["src_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, S, cfg.d_model))
+    if cfg.frontend == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.frontend_len, cfg.d_model))
+
+    from repro.models import encdec, transformer
+    if cfg.is_encdec:
+        logits_f, _ = encdec.forward(params, cfg, batch)
+    else:
+        logits_f, _ = transformer.forward(params, cfg, batch["tokens"],
+                                          extra_embeds=batch.get("patches"))
+        if cfg.frontend == "vlm":
+            logits_f = logits_f[:, cfg.frontend_len:]
+
+    cache = api.init_cache(cfg, B, S + (cfg.frontend_len or 0),
+                           dtype=jnp.float32)
+    pre_batch = {k: v for k, v in batch.items() if k != "labels"}
+    pre_batch["tokens"] = tokens[:, :K]
+    lp, cache = api.prefill(params, cfg, pre_batch, cache)
+    scale = np.abs(np.asarray(logits_f)).max() + 1e-6
+    errs = [np.abs(np.asarray(lp - logits_f[:, K - 1])).max() / scale]
+    base = K + (cfg.frontend_len or 0)
+    for i in range(K, S):
+        lg, cache = api.decode_step(params, cfg, tokens[:, i], cache,
+                                    jnp.int32(base + (i - K)))
+        errs.append(np.abs(np.asarray(lg - logits_f[:, i])).max() / scale)
+    assert max(errs) < 2e-3, (arch, errs)

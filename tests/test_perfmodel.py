@@ -1,0 +1,78 @@
+"""Analytical performance model vs the paper's own quoted numbers."""
+import pytest
+
+from repro.core.folds import PEArray, decompose
+from repro.core.loopnest import synthetic_suite, vgg16_conv_layers
+from repro.core.perfmodel import (MavecConfig, SystemCycles, kips,
+                                  layer_perf, reuse_metrics, t_ops_cycles)
+
+
+def test_kips_at_paper_quoted_cycles():
+    """§V.C: PCIe 7.6M + WL 0.64M + MT 260.7M + OP 21.1M cycles -> 12.7
+    KIPS on the 64x64 array."""
+    layers = [cv for _, cv in vgg16_conv_layers()]
+    cycles = SystemCycles(t_pcie=7.6e6, t_wl=0.64e6, t_mt=260.7e6,
+                          t_op=21.1e6)
+    r = kips(layers, PEArray(64, 64), cycles=cycles)
+    assert r["kips"] == pytest.approx(12.7, rel=0.02)
+
+
+def test_throughput_64x64_peak():
+    """Fig 7c: largest synthetic workload reaches ~1.56 TFLOP/s on 64x64."""
+    lp = layer_perf(synthetic_suite()[3], PEArray(64, 64))
+    assert 1.4e3 <= lp.gflops <= 1.6e3     # GFLOP/s
+
+
+def test_throughput_monotone_in_array_size():
+    for cv in synthetic_suite():
+        g16 = layer_perf(cv, PEArray(16, 16)).gflops
+        g32 = layer_perf(cv, PEArray(32, 32)).gflops
+        g64 = layer_perf(cv, PEArray(64, 64)).gflops
+        assert g16 < g32 < g64
+
+
+def test_execution_time_eq11():
+    """eq (11) on the largest workload: 64x64 gives ~10.4M cycles, matching
+    the paper's quoted "just over 10 million".
+
+    Known paper inconsistency (documented in DESIGN.md): Fig 7b quotes
+    20.1M cycles for 16x16, but eq (11) evaluated with the paper's own
+    Table 3 fold counts (N_FT(C)=512, N_FT(R)=32, Shifts=N_DT=56) gives
+    ~205M — a 16x-parallelism-consistent value.  We implement the equation,
+    not the figure."""
+    cv = synthetic_suite()[3]
+    t16 = t_ops_cycles(decompose(cv, PEArray(16, 16)))
+    t64 = t_ops_cycles(decompose(cv, PEArray(64, 64)))
+    assert t64 == pytest.approx(10.4e6, rel=0.05)
+    assert t16 / t64 == pytest.approx(20.0, rel=0.15)
+
+
+def test_reuse_metrics_scale_with_array():
+    """Fig 8: all three reuse/parallelism metrics grow with array size."""
+    cv = synthetic_suite()[2]
+    m16 = reuse_metrics(decompose(cv, PEArray(16, 16)))
+    m64 = reuse_metrics(decompose(cv, PEArray(64, 64)))
+    assert m64.temporal_weight_reuse > m16.temporal_weight_reuse
+    assert m64.spatial_input_reuse > m16.spatial_input_reuse
+    assert m64.spatial_parallelism > m16.spatial_parallelism
+    assert m64.spatial_reduction > m16.spatial_reduction
+
+
+def test_vgg_utilization_92_on_64():
+    """Fig 9a: 64x64 >90% on (almost) all layers; 16x16 capped near 75."""
+    layers = [cv for _, cv in vgg16_conv_layers()]
+    u64 = [decompose(cv, PEArray(64, 64)).avg_utilization()
+           for cv in layers[1:]]     # conv1_1 (C=3) is the known outlier
+    assert min(u64) > 90.0
+    u16 = [decompose(cv, PEArray(16, 16)).avg_utilization()
+           for cv in layers[1:]]
+    assert max(u16) <= 76.0
+
+
+def test_first_principles_message_transfer_dominates():
+    """§V.C: message transfer is the dominant runtime component."""
+    from repro.core.perfmodel import system_cycles
+    layers = [cv for _, cv in vgg16_conv_layers()]
+    sc = system_cycles(layers, PEArray(64, 64), MavecConfig())
+    assert sc.t_mt > sc.t_op
+    assert sc.t_mt > sc.t_wl

@@ -1,0 +1,70 @@
+"""Roofline module + collective parsing unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import (TPU_V5E, CollectiveStats, RooflineReport,
+                            parse_collectives)
+
+
+def test_ring_factors_via_parse():
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[2,8]<=[16], to_apply=%s
+  %ag = f32[2048]{0} all-gather(%y), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = f32[512]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    st = parse_collectives(hlo)
+    assert st.count == {"all-reduce": 1, "all-gather": 1,
+                        "collective-permute": 1}
+    # all-reduce: 4096 B * 2*(8-1)/8
+    assert st.wire_bytes["all-reduce"] == pytest.approx(4096 * 2 * 7 / 8)
+    assert st.wire_bytes["all-gather"] == pytest.approx(8192 * 7 / 8)
+    assert st.wire_bytes["collective-permute"] == pytest.approx(2048)
+
+
+def test_roofline_dominant_and_fraction():
+    rep = RooflineReport(
+        flops_per_dev=197e12,          # exactly 1 s of compute
+        bytes_per_dev=819e9 * 2,       # 2 s of memory
+        coll_wire_bytes=50e9 * 0.5,    # 0.5 s of collectives
+        collectives=CollectiveStats({}, {}, {}),
+        hw=TPU_V5E, model_flops=197e12 * 256, chips=256)
+    assert rep.t_compute == pytest.approx(1.0)
+    assert rep.t_memory == pytest.approx(2.0)
+    assert rep.t_collective == pytest.approx(0.5)
+    assert rep.dominant == "memory"
+    # useful: model == total hlo flops -> ratio 1; frac = 1s ideal / 2s bound
+    assert rep.useful_flops_ratio == pytest.approx(1.0)
+    assert rep.roofline_fraction == pytest.approx(0.5)
+
+
+def test_roofline_terms_from_compiled():
+    from repro.roofline import roofline_terms
+
+    def f(x, w):
+        return jnp.sum(jnp.tanh(x @ w))
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                         jax.ShapeDtypeStruct((128, 256), jnp.float32)
+                         ).compile()
+    rep = roofline_terms(c, chips=1, model_flops=2 * 64 * 128 * 256)
+    want = 2 * 64 * 128 * 256
+    assert want <= rep.flops_per_dev <= 1.2 * want
+    assert rep.bytes_per_dev > 0
+    assert 0.8 <= rep.useful_flops_ratio <= 1.0
+
+
+def test_eval_harness():
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    from repro.models import api
+    from repro.train.evaluate import evaluate
+    cfg = get_config("qwen3-4b", reduced=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                    global_batch=2, seed=99))
+    m = evaluate(params, cfg, iter(pipe), max_batches=2)
+    assert m["tokens"] == 2 * 2 * 32
+    assert 0 <= m["token_acc"] <= 1
+    assert np.isfinite(m["nll"]) and m["ppl"] > 1
