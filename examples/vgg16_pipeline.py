@@ -1,6 +1,12 @@
 """End-to-end VGG-16 inference through the fold framework — the paper's own
 evaluation model (Table 2B), at reduced width so it runs on CPU in seconds.
 
+Two execution paths:
+  * per-layer ``vgg.forward`` with an explicit impl (the validation path);
+  * the cached fold-schedule engine (``vgg.compile_forward``): one static
+    whole-network schedule, dataflows picked by the cost model, interpret
+    policy auto-selecting the fastest correct path for this backend.
+
     PYTHONPATH=src python examples/vgg16_pipeline.py [--width 0.125]
 """
 import argparse
@@ -19,7 +25,11 @@ def main():
     ap.add_argument("--img", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--impl", default="direct",
-                    choices=["direct", "im2col", "fold_ws", "fold_os", "xla"])
+                    choices=["direct", "im2col", "fold_ws", "fold_os",
+                             "fold_auto", "xla"])
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "pallas", "reference"],
+                    help="engine execution policy for the compiled path")
     args = ap.parse_args()
 
     params = vgg.init_params(jax.random.PRNGKey(0), width_mult=args.width,
@@ -35,6 +45,25 @@ def main():
     print(f"VGG-16(w={args.width}) impl={args.impl}: logits {logits.shape}, "
           f"compile {compile_t:.1f}s, step {time.perf_counter()-t0:.3f}s")
     assert bool(jnp.isfinite(logits).all())
+
+    # the cached fold-schedule engine: whole-network static schedule
+    t0 = time.perf_counter()
+    net = vgg.compile_forward(params, img=args.img, batch=args.batch,
+                              policy=args.policy)
+    logits2 = net(params, x).block_until_ready()
+    compile_t = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    logits2 = net(params, x).block_until_ready()
+    step_t = time.perf_counter() - t0
+    reuse = net.fold_reuse()
+    print(f"engine(policy={args.policy}, mode={net.mode}): "
+          f"compile {compile_t:.1f}s, step {step_t:.3f}s, "
+          f"{reuse['distinct_schedules']} schedules for "
+          f"{reuse['conv_layers']} conv layers "
+          f"({reuse['hits']} fold-reuse hits)")
+    err = float(jnp.max(jnp.abs(logits2 - logits)))
+    print(f"max |engine - per-layer| = {err:.2e}")
+    print(net.describe())
 
     # full-size analytical projection on the paper's 64x64 MAVeC array
     layers = [cv for _, cv in vgg16_conv_layers()]

@@ -10,6 +10,10 @@ from repro.core.mapping import (ConvBlockPlan, MappingPlan, SpatialMap,
 from repro.core.perfmodel import (LayerPerf, MavecConfig, kips, layer_perf,
                                   reuse_metrics, t_ops_cycles)
 from repro.core.simulator import execute_conv_by_folds, simulate_cycles
+# engine last: it builds on mapping/perfmodel (kernel imports are lazy)
+from repro.core.engine import (CompiledNetwork, ConvSchedule, ScheduleCache,
+                               ScheduleKey, compile_network, dataflow_costs,
+                               resolve_execution, select_dataflow)
 
 __all__ = [
     "AttnLoopNest", "ConvLoopNest", "GemmLoopNest", "synthetic_suite",
@@ -17,5 +21,7 @@ __all__ = [
     "ConvBlockPlan", "MappingPlan", "SpatialMap", "TemporalMap",
     "plan_conv_blocks", "LayerPerf", "MavecConfig", "kips", "layer_perf",
     "reuse_metrics", "t_ops_cycles", "execute_conv_by_folds",
-    "simulate_cycles",
+    "simulate_cycles", "CompiledNetwork", "ConvSchedule", "ScheduleCache",
+    "ScheduleKey", "compile_network", "dataflow_costs", "resolve_execution",
+    "select_dataflow",
 ]

@@ -1,0 +1,468 @@
+"""Cached fold-schedule execution engine (DESIGN.md §4).
+
+The paper compiles the 7-D loop nest into a *static* fold schedule once and
+then streams data through it; the headline VGG-16 numbers (>90% PE
+utilization, 12.7 KIPS end-to-end) rest on the observation that a network's
+conv layers collapse to a handful of distinct loop-nest geometries whose
+schedules can be reused ("fold reuse").  This module is the software
+analogue of that compile-once discipline:
+
+* ``ScheduleKey`` canonicalizes a ``ConvLoopNest`` to its *filter-fold
+  geometry* ``(N_F, C, R, S, stride, dilation)``.  The key deliberately
+  excludes the spatial extents (X, Y, and the batch N): the Filter Fold —
+  the weight block resident in VMEM — depends only on the filter tensor,
+  while the Image Folds merely stream more or fewer positions through it.
+  VGG-16's 13 conv layers therefore collapse to 8 distinct keys.
+
+* ``ConvSchedule`` is one cached schedule: the ``ConvBlockPlan`` solved
+  once per key, plus the dataflow (``weight_stationary`` vs
+  ``output_stationary``) selected from ``core/perfmodel.py`` cost constants
+  instead of a hard-coded default.
+
+* ``ScheduleCache`` is the registry: hit/miss/replan counters double as the
+  paper's fold-reuse metric, and the partially-applied Pallas kernels are
+  memoized per (key, interpret) so repeated layers share one closure.
+
+* ``compile_network`` walks a conv model spec (``models/vgg.py``'s
+  ``VGG_LAYERS`` or any spec in the same shape), builds the whole-network
+  static schedule up front, and returns a jit-compiled end-to-end forward
+  with the schedule baked in.
+
+* the ``interpret`` policy (``resolve_execution``) auto-selects real Pallas
+  lowering when a TPU backend is present and falls back cleanly to the
+  fused-XLA reference path otherwise, so the compiled network is always the
+  fastest correct option for the current backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.loopnest import ConvLoopNest
+from repro.core.mapping import ConvBlockPlan, plan_conv_blocks
+from repro.core.perfmodel import MavecConfig
+
+__all__ = [
+    "ScheduleKey",
+    "ConvSchedule",
+    "CacheStats",
+    "ScheduleCache",
+    "dataflow_costs",
+    "select_dataflow",
+    "plan_and_dataflow",
+    "pallas_interpret_default",
+    "resolve_execution",
+    "maxpool2",
+    "vgg_head",
+    "CompiledNetwork",
+    "compile_network",
+]
+
+
+# --------------------------------------------------------------------------
+# Canonical schedule keys
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleKey:
+    """Filter-fold geometry of a conv loop nest — the schedule identity.
+
+    Spatial extents (X, Y) and batch (N) are excluded: they change how many
+    image folds stream through the schedule, not the schedule itself (the
+    block plan is clamped to the actual dims at kernel-bind time).
+    """
+    nf: int
+    c: int
+    r: int
+    s: int
+    stride: int
+    dilation: int = 1
+
+    @classmethod
+    def from_loopnest(cls, cv: ConvLoopNest) -> "ScheduleKey":
+        return cls(nf=cv.nf, c=cv.c, r=cv.r, s=cv.s,
+                   stride=cv.stride, dilation=cv.dilation)
+
+    def __str__(self) -> str:
+        return f"{self.r}x{self.s}x{self.c}->{self.nf}/s{self.stride}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSchedule:
+    """One compiled fold schedule: block plan + selected dataflow.
+
+    ``nest`` records the loop nest the plan was solved against (the largest
+    spatial extent seen for this key); ``costs`` are the estimated cycles
+    per dataflow that drove the selection, kept for reporting.
+    """
+    key: ScheduleKey
+    nest: ConvLoopNest
+    plan: ConvBlockPlan
+    dataflow: str                              # weight_/output_stationary
+    costs: Tuple[Tuple[str, float], ...]       # (dataflow, est. cycles)
+
+    @property
+    def cost_dict(self) -> Dict[str, float]:
+        return dict(self.costs)
+
+    def impl(self) -> str:
+        """The ``kernels.ops.conv2d`` impl string for this dataflow."""
+        return ("fold_ws" if self.dataflow == "weight_stationary"
+                else "fold_os")
+
+
+# --------------------------------------------------------------------------
+# Dataflow selection from perfmodel cost estimates
+# --------------------------------------------------------------------------
+
+def dataflow_costs(cv: ConvLoopNest, plan: ConvBlockPlan,
+                   cfg: Optional[MavecConfig] = None) -> Dict[str, float]:
+    """Estimated execution cycles of each dataflow for this layer.
+
+    Both dataflows do the same MACs; they differ in off-chip traffic:
+
+      weight_stationary  — weights fetched once; every NF fold re-streams
+        the input; each of the g_c depth folds emits a partial-sum fold to
+        HBM that is read back for the final reduce (paper Fig 5).
+      output_stationary  — partial sums live in the VMEM accumulator and
+        the output is written exactly once, but the weight block is
+        re-fetched for every P fold (the grid re-walks the C folds per P).
+
+    Traffic is converted to cycles with the ``MavecConfig`` off-chip
+    bandwidth and clock; the shared compute term is MACs spread over the
+    tile's PEs.  Purely geometric — deterministic for a given nest.
+    """
+    cfg = cfg or MavecConfig()
+    bpe = cfg.bytes_per_elem
+    sizes = cv.tensor_sizes()
+    w_bytes = sizes["filter"] * bpe
+    in_bytes = cv.n * cv.c * cv.padded_x * cv.padded_y * bpe
+    out_bytes = sizes["output"] * bpe
+    g_nf, g_c, g_p = plan.clamped(cv.nf, cv.c, cv.p).grid
+
+    # partial-sum folds: written once per depth fold, read back to reduce;
+    # with a single depth fold the output is simply written once.
+    ws_psum = out_bytes if g_c == 1 else 2 * g_c * out_bytes
+    ws_traffic = w_bytes + g_nf * in_bytes + ws_psum
+    os_traffic = g_p * w_bytes + g_nf * in_bytes + out_bytes
+
+    def cycles(traffic_bytes: float) -> float:
+        return traffic_bytes / (cfg.offchip_gbps * 1e9) * (cfg.freq_ghz * 1e9)
+
+    compute = cv.macs / cfg.tile_pes
+    return {
+        "weight_stationary": compute + cycles(ws_traffic),
+        "output_stationary": compute + cycles(os_traffic),
+    }
+
+
+def select_dataflow(cv: ConvLoopNest, plan: ConvBlockPlan,
+                    cfg: Optional[MavecConfig] = None,
+                    costs: Optional[Dict[str, float]] = None) -> str:
+    """Pick the cheaper dataflow; ties go to ``output_stationary`` (its
+    single output write avoids the host-side partial-sum reduce)."""
+    costs = costs if costs is not None else dataflow_costs(cv, plan, cfg)
+    if costs["output_stationary"] <= costs["weight_stationary"]:
+        return "output_stationary"
+    return "weight_stationary"
+
+
+def plan_and_dataflow(cv: ConvLoopNest,
+                      cfg: Optional[MavecConfig] = None
+                      ) -> Tuple[ConvBlockPlan, str]:
+    """Uncached one-shot planning (the ``impl="fold_auto"`` path)."""
+    plan = plan_conv_blocks(cv)
+    return plan, select_dataflow(cv, plan, cfg)
+
+
+# --------------------------------------------------------------------------
+# Interpret / execution policy
+# --------------------------------------------------------------------------
+
+def pallas_interpret_default() -> bool:
+    """Pallas kernels lower for real only on TPU; elsewhere interpret."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_execution(policy: str = "auto") -> Tuple[str, bool]:
+    """Resolve an execution policy to ``(mode, interpret)``.
+
+      "auto"       — real Pallas lowering on TPU; on other backends fall
+                     back cleanly to the fused-XLA reference conv (the
+                     schedules are still built — planning and fold-reuse
+                     accounting are backend-independent).
+      "pallas"     — force the fold kernels (interpreted off-TPU).
+      "reference"  — force the reference conv everywhere.
+    """
+    if policy == "auto":
+        if jax.default_backend() == "tpu":
+            return "pallas", False
+        return "reference", False
+    if policy == "pallas":
+        return "pallas", pallas_interpret_default()
+    if policy == "reference":
+        return "reference", False
+    raise ValueError(f"unknown execution policy {policy!r} "
+                     "(want auto|pallas|reference)")
+
+
+# --------------------------------------------------------------------------
+# The schedule registry
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    replans: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "replans": self.replans, "hit_rate": round(self.hit_rate, 4)}
+
+
+class ScheduleCache:
+    """Registry of fold schedules keyed by filter-fold geometry.
+
+    ``schedule_for`` computes each geometry's ``ConvBlockPlan`` and
+    dataflow once and reuses it for every later layer with the same key —
+    the paper's fold reuse.  A reused plan is clamped to the actual dims by
+    the kernel, so reuse across shrinking spatial extents is exact; if a
+    *larger* spatial extent arrives later, the entry is re-planned in place
+    (counted in ``stats.replans``) so the VMEM working-set bound stays
+    honest.
+    """
+
+    def __init__(self, cfg: Optional[MavecConfig] = None,
+                 vmem_limit: int = 64 * 1024 * 1024):
+        self.cfg = cfg or MavecConfig()
+        self.vmem_limit = vmem_limit
+        self.stats = CacheStats()
+        self._entries: Dict[ScheduleKey, ConvSchedule] = {}
+        self._kernels: Dict[Tuple[ScheduleKey, str, bool], Callable] = {}
+
+    # -- registry ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def distinct(self) -> int:
+        return len(self._entries)
+
+    def schedules(self) -> List[ConvSchedule]:
+        return list(self._entries.values())
+
+    def _build(self, cv: ConvLoopNest, key: ScheduleKey) -> ConvSchedule:
+        plan = plan_conv_blocks(cv, vmem_limit=self.vmem_limit)
+        costs = dataflow_costs(cv, plan, self.cfg)
+        dataflow = select_dataflow(cv, plan, self.cfg, costs=costs)
+        return ConvSchedule(key=key, nest=cv, plan=plan, dataflow=dataflow,
+                            costs=tuple(sorted(costs.items())))
+
+    def schedule_for(self, cv: ConvLoopNest) -> ConvSchedule:
+        key = ScheduleKey.from_loopnest(cv)
+        hit = self._entries.get(key)
+        if hit is not None:
+            if (cv.padded_x > hit.nest.padded_x
+                    or cv.padded_y > hit.nest.padded_y):
+                # larger image than planned for: re-solve so the working
+                # set still fits VMEM; the key (and cache slot) is stable.
+                self.stats.replans += 1
+                self._entries[key] = self._build(cv, key)
+                self._kernels = {k: v for k, v in self._kernels.items()
+                                 if k[0] != key}
+                return self._entries[key]
+            self.stats.hits += 1
+            return hit
+        self.stats.misses += 1
+        sched = self._build(cv, key)
+        self._entries[key] = sched
+        return sched
+
+    # -- kernel binding ----------------------------------------------------
+    def kernel_for(self, sched: ConvSchedule,
+                   interpret: Optional[bool] = None) -> Callable:
+        """The partially-applied fold kernel for a schedule: plan, dataflow
+        and interpret mode baked in; memoized per (key, dataflow,
+        interpret) so repeated layers share one closure."""
+        from repro.kernels.conv2d_ws import conv2d_folded
+        if interpret is None:
+            interpret = pallas_interpret_default()
+        kk = (sched.key, sched.dataflow, interpret)
+        fn = self._kernels.get(kk)
+        if fn is None:
+            fn = functools.partial(conv2d_folded, plan=sched.plan,
+                                   dataflow=sched.dataflow,
+                                   interpret=interpret)
+            self._kernels[kk] = fn
+        return fn
+
+
+# --------------------------------------------------------------------------
+# Whole-network compilation
+# --------------------------------------------------------------------------
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max-pool on NCHW."""
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def vgg_head(params: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    """Flatten + the 3-layer fc classifier head (shared with models/vgg)."""
+    n = x.shape[0]
+    x = x.reshape(n, -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def _conv_entry(entry) -> Tuple[str, int, int]:
+    """Normalize a conv spec entry to (name, stride, pad).
+
+    Accepted: ("name", cin, cout) — 3x3 stride-1 pad-1 (the VGG idiom) —
+    or ("name", cin, cout, stride, pad).
+    """
+    name = entry[0]
+    if len(entry) >= 5:
+        return name, int(entry[3]), int(entry[4])
+    return name, 1, 1
+
+
+@dataclasses.dataclass
+class CompiledNetwork:
+    """A whole-network static fold schedule plus its jitted forward.
+
+    ``layer_schedules`` and ``build_stats`` are snapshots taken at compile
+    time: they describe exactly what this network executes even if the
+    (possibly shared) cache is mutated or replanned afterwards.
+    """
+    apply: Callable[[Dict[str, Any], jnp.ndarray], jnp.ndarray]
+    layer_schedules: Tuple[Tuple[str, ConvSchedule], ...]  # per conv layer
+    build_stats: CacheStats        # cache activity during this compile only
+    cache: ScheduleCache
+    mode: str                # "pallas" | "reference"
+    interpret: bool
+
+    def __call__(self, params: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+        return self.apply(params, x)
+
+    @property
+    def layer_keys(self) -> Tuple[Tuple[str, ScheduleKey], ...]:
+        return tuple((name, s.key) for name, s in self.layer_schedules)
+
+    @property
+    def distinct_schedules(self) -> int:
+        return len({s.key for _, s in self.layer_schedules})
+
+    def fold_reuse(self) -> dict:
+        """The paper's fold-reuse metric for this network's build."""
+        d = self.build_stats.as_dict()
+        d.update(conv_layers=len(self.layer_schedules),
+                 distinct_schedules=self.distinct_schedules)
+        return d
+
+    def describe(self) -> str:
+        lines = [f"CompiledNetwork(mode={self.mode}, "
+                 f"interpret={self.interpret}, "
+                 f"layers={len(self.layer_schedules)}, "
+                 f"schedules={self.distinct_schedules})"]
+        for name, sched in self.layer_schedules:
+            lines.append(f"  {name:<10} {str(sched.key):<24} "
+                         f"{sched.dataflow:<18} grid={sched.plan.grid}")
+        return "\n".join(lines)
+
+
+def compile_network(params: Dict[str, Any],
+                    layers: Sequence,
+                    input_shape: Tuple[int, int, int, int],
+                    *,
+                    policy: str = "auto",
+                    cache: Optional[ScheduleCache] = None,
+                    head: Optional[Callable] = None,
+                    jit: bool = True) -> CompiledNetwork:
+    """Compile a conv network spec into a static fold schedule + forward.
+
+    ``layers`` entries: ``"M"`` (2x2 max-pool) or ``(name, cin, cout[,
+    stride, pad])`` conv blocks whose weights live at ``params[name]["w"]``
+    (OIHW) with bias ``params[name]["b"]``; every conv is followed by a
+    ReLU, matching ``models/vgg.py``.  ``input_shape`` is NCHW.
+
+    All schedules are built eagerly here — the returned forward never
+    plans; its trace just binds the cached kernels.  ``head`` post-processes
+    the trunk output (default: the VGG fc head when ``params`` has one,
+    identity otherwise).
+    """
+    # explicit None-check: an empty ScheduleCache is falsy (len 0) but
+    # must still be used, so its stats/schedules reach the caller
+    cache = cache if cache is not None else ScheduleCache()
+    mode, interpret = resolve_execution(policy)
+    n, chan, h, w_ = input_shape
+    stats_before = dataclasses.replace(cache.stats)
+
+    layer_schedules: List[Tuple[str, ConvSchedule]] = []
+    plan_steps: List[Tuple[str, object]] = []   # ("pool", None)|("conv", ...)
+    for entry in layers:
+        if entry == "M":
+            plan_steps.append(("pool", None))
+            h, w_ = h // 2, w_ // 2
+            continue
+        name, stride, pad = _conv_entry(entry)
+        wshape = params[name]["w"].shape          # (NF, C, R, S)
+        nf, cin, r, s = (int(d) for d in wshape)
+        if cin != chan:
+            raise ValueError(f"{name}: weights expect {cin} input channels, "
+                             f"trunk carries {chan}")
+        cv = ConvLoopNest(n=n, nf=nf, c=cin, r=r, s=s, x=h, y=w_,
+                          stride=stride, pad=pad)
+        sched = cache.schedule_for(cv)
+        layer_schedules.append((name, sched))
+        plan_steps.append(("conv", (name, stride, pad, sched)))
+        h, w_, chan = cv.p, cv.q, nf
+
+    if head is None:
+        head = vgg_head if "fc1" in params else (lambda p, x: x)
+
+    steps = tuple(plan_steps)
+
+    def forward(p: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+        # Schedules are baked in: tracing binds the cached kernels and
+        # never re-plans (no cache lookups on the hot path).
+        from repro.kernels.ops import conv2d
+        for kind, info in steps:
+            if kind == "pool":
+                x = maxpool2(x)
+                continue
+            name, stride, pad, sched = info
+            w = p[name]["w"]
+            b = p[name]["b"]
+            if mode == "reference":
+                y = conv2d(x, w, stride=stride, pad=pad, impl="direct")
+            else:
+                y = conv2d(x, w, stride=stride, pad=pad, impl=sched.impl(),
+                           plan=sched.plan, interpret=interpret)
+            x = jax.nn.relu(y + b[None, :, None, None])
+        return head(p, x)
+
+    build_stats = CacheStats(
+        hits=cache.stats.hits - stats_before.hits,
+        misses=cache.stats.misses - stats_before.misses,
+        replans=cache.stats.replans - stats_before.replans)
+    apply = jax.jit(forward) if jit else forward
+    return CompiledNetwork(apply=apply,
+                           layer_schedules=tuple(layer_schedules),
+                           build_stats=build_stats, cache=cache,
+                           mode=mode, interpret=interpret)

@@ -126,6 +126,22 @@ class ConvBlockPlan:
     def total_folds(self) -> int:
         return self.grid[0] * self.grid[1] * self.grid[2]
 
+    def clamped(self, nf: int, c: int, p: int) -> "ConvBlockPlan":
+        """Clamp block shapes to a layer's actual dims and re-derive the
+        grid.  This is what makes a cached schedule reusable across layers
+        that share filter-fold geometry but differ spatially (the engine's
+        fold reuse): blocks planned for the largest extent shrink exactly
+        to any smaller one."""
+        nf_b = max(1, min(self.nf_block, nf))
+        c_b = max(1, min(self.c_block, c))
+        p_b = max(1, min(self.p_block, p))
+        grid = (math.ceil(nf / nf_b), math.ceil(c / c_b), math.ceil(p / p_b))
+        if (nf_b, c_b, p_b, grid) == (self.nf_block, self.c_block,
+                                      self.p_block, self.grid):
+            return self
+        return dataclasses.replace(self, nf_block=nf_b, c_block=c_b,
+                                   p_block=p_b, grid=grid)
+
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m

@@ -30,7 +30,6 @@ pre-pads spatially (``ops.py``).
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional, Tuple
 
 import jax
@@ -110,11 +109,17 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
                   stride: int = 1,
                   plan: Optional[ConvBlockPlan] = None,
                   dataflow: str = "weight_stationary",
-                  interpret: bool = True,
+                  interpret: Optional[bool] = None,
                   out_dtype=None) -> jnp.ndarray:
     """Run the fold-streamed conv kernel on a PRE-PADDED input.
 
     x_padded: (N, C, Xp, Yp)   w: (NF, C, R, S)   -> (N, NF, P, Q)
+
+    ``plan`` may come from the engine's schedule cache and describe a
+    *larger* geometry sharing this layer's filter-fold key; it is clamped
+    to the actual dims here, which is what makes schedule reuse exact.
+    ``interpret=None`` resolves via the engine's backend policy (real
+    lowering on TPU, interpreter elsewhere).
     """
     n, c, xp_, yp_ = x_padded.shape
     nf, cw, r, s = w.shape
@@ -122,16 +127,16 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     p = (xp_ - r) // stride + 1
     q = (yp_ - s) // stride + 1
     out_dtype = out_dtype or x_padded.dtype
+    if interpret is None:
+        from repro.core.engine import pallas_interpret_default
+        interpret = pallas_interpret_default()
     if plan is None:
         cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s,
                           x=xp_, y=yp_, stride=stride, pad=0)
         plan = plan_conv_blocks(cv)
-    nf_b = min(plan.nf_block, nf)
-    c_b = min(plan.c_block, c)
-    p_b = min(plan.p_block, p)
-    g_nf = math.ceil(nf / nf_b)
-    g_c = math.ceil(c / c_b)
-    g_p = math.ceil(p / p_b)
+    plan = plan.clamped(nf, c, p)
+    nf_b, c_b, p_b = plan.nf_block, plan.c_block, plan.p_block
+    g_nf, g_c, g_p = plan.grid
 
     # Pad every tiled dim to an exact block multiple: zero channels/filters
     # contribute nothing to the accumulation, and extra bottom rows only

@@ -1,16 +1,21 @@
 """Public jit'd wrappers for the fold-streamed kernels.
 
 Dispatch policy:
-  * On TPU, the Pallas kernels run compiled (interpret=False).
+  * On TPU, the Pallas kernels run compiled (interpret=False) with the
+    dataflow selected per layer by the engine's perfmodel cost estimates.
   * On CPU (this container), the kernels run under ``interpret=True`` for
     validation; the default *production* path on CPU is the pure-jnp
     reference (XLA fuses it well), so that models remain fast to test.
   * ``impl`` forces a specific path:
-      "fold_ws"  — weight-stationary Pallas (paper-faithful dataflow)
-      "fold_os"  — output-stationary Pallas (beyond-paper optimized)
-      "im2col"   — GEMM baseline (what the paper argues against)
-      "direct"   — shifted-matmul reference
-      "xla"      — lax.conv_general_dilated
+      "fold_ws"   — weight-stationary Pallas (paper-faithful dataflow)
+      "fold_os"   — output-stationary Pallas (beyond-paper optimized)
+      "fold_auto" — Pallas with the dataflow picked by the engine's
+                    cost model (``core/engine.py``)
+      "im2col"    — GEMM baseline (what the paper argues against)
+      "direct"    — shifted-matmul reference
+      "xla"       — lax.conv_general_dilated
+  * ``plan`` pins a pre-solved ``ConvBlockPlan`` (the engine's schedule
+    cache passes these in, so repeated geometries skip re-planning).
 
 Gradients: conv ops carry a ``jax.custom_vjp`` whose backward pass is
 expressed with the same reference primitives (transposed conv relations),
@@ -32,10 +37,11 @@ __all__ = ["conv2d", "conv1d_causal", "default_conv_impl"]
 
 
 def default_conv_impl() -> str:
-    return "fold_os" if jax.default_backend() == "tpu" else "direct"
+    return "fold_auto" if jax.default_backend() == "tpu" else "direct"
 
 
-def _conv2d_fwd_impl(x, w, stride: int, pad: int, impl: str):
+def _conv2d_fwd_impl(x, w, stride: int, pad: int, impl: str,
+                     plan=None, interpret=None):
     if impl == "xla":
         return jax.lax.conv_general_dilated(
             x, w, (stride, stride), [(pad, pad), (pad, pad)],
@@ -44,25 +50,40 @@ def _conv2d_fwd_impl(x, w, stride: int, pad: int, impl: str):
         return _ref.conv2d_direct(x, w, stride, pad)
     if impl == "im2col":
         return _ref.conv2d_im2col(x, w, stride, pad)
-    if impl in ("fold_ws", "fold_os"):
+    if impl in ("fold_ws", "fold_os", "fold_auto"):
+        if impl == "fold_auto":
+            # one-shot engine planning (use models via the engine's
+            # ScheduleCache / compile_network to amortize this); a supplied
+            # plan is kept and only the dataflow is selected against it
+            from repro.core.engine import plan_and_dataflow, select_dataflow
+            from repro.core.loopnest import ConvLoopNest
+            n, c, xh, xw = x.shape
+            nf, _, r, s = w.shape
+            cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s, x=xh, y=xw,
+                              stride=stride, pad=pad)
+            if plan is None:
+                plan, dataflow = plan_and_dataflow(cv)
+            else:
+                dataflow = select_dataflow(cv, plan)
+        else:
+            dataflow = ("weight_stationary" if impl == "fold_ws"
+                        else "output_stationary")
         xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
-        dataflow = ("weight_stationary" if impl == "fold_ws"
-                    else "output_stationary")
         return conv2d_folded(xp, w, stride=stride, dataflow=dataflow,
-                             interpret=jax.default_backend() != "tpu")
+                             plan=plan, interpret=interpret)
     raise ValueError(f"unknown conv impl {impl!r}")
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _conv2d(x, w, stride, pad, impl):
-    return _conv2d_fwd_impl(x, w, stride, pad, impl)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _conv2d(x, w, stride, pad, impl, plan, interpret):
+    return _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret)
 
 
-def _conv2d_vjp_fwd(x, w, stride, pad, impl):
-    return _conv2d_fwd_impl(x, w, stride, pad, impl), (x, w)
+def _conv2d_vjp_fwd(x, w, stride, pad, impl, plan, interpret):
+    return _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret), (x, w)
 
 
-def _conv2d_vjp_bwd(stride, pad, impl, res, g):
+def _conv2d_vjp_bwd(stride, pad, impl, plan, interpret, res, g):
     x, w = res
     n, c, xh, xw_ = x.shape
     nf, _, r, s = w.shape
@@ -95,9 +116,16 @@ _conv2d.defvjp(_conv2d_vjp_fwd, _conv2d_vjp_bwd)
 
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0,
-           impl: Optional[str] = None) -> jnp.ndarray:
-    """Convolution through the fold framework.  x: NCHW, w: OIHW."""
-    return _conv2d(x, w, stride, pad, impl or default_conv_impl())
+           impl: Optional[str] = None, plan=None,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Convolution through the fold framework.  x: NCHW, w: OIHW.
+
+    ``plan`` (a ``ConvBlockPlan``, typically from the engine's schedule
+    cache) and ``interpret`` thread through to the fold kernels; both are
+    static (hashable) and participate in jit caching.
+    """
+    return _conv2d(x, w, stride, pad, impl or default_conv_impl(), plan,
+                   interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -105,8 +133,9 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0,
 
 def _conv1d_fwd_impl(x, w, impl: str):
     if impl == "fold":
-        return conv1d_causal_folded(
-            x, w, interpret=jax.default_backend() != "tpu")
+        from repro.core.engine import pallas_interpret_default
+        return conv1d_causal_folded(x, w,
+                                    interpret=pallas_interpret_default())
     return _ref.conv1d_causal_ref(x, w)
 
 

@@ -3,7 +3,11 @@ fold-streamed convolution kernels.
 
 Every conv layer runs through ``repro.kernels.ops.conv2d`` so the whole
 network exercises the paper's Filter-Fold/Image-Fold dataflow (impl
-selectable: fold_ws / fold_os Pallas, im2col GEMM baseline, direct).
+selectable: fold_ws / fold_os / fold_auto Pallas, im2col GEMM baseline,
+direct).  ``forward`` accepts a ``ScheduleCache`` so repeated loop-nest
+geometries reuse one fold schedule; ``compile_forward`` goes further and
+bakes the whole-network static schedule into a jitted forward
+(``core/engine.py``, DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -12,10 +16,15 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (CompiledNetwork, ScheduleCache,
+                               compile_network, maxpool2, vgg_head)
+from repro.core.loopnest import ConvLoopNest
 from repro.kernels.ops import conv2d
+
 from repro.models.common import Axes, TreeMaker
 
-__all__ = ["VGG_LAYERS", "init_params", "forward", "n_classes"]
+__all__ = ["VGG_LAYERS", "init_params", "forward", "compile_forward",
+           "n_classes"]
 
 # (name, in_ch, out_ch) conv3x3 blocks; "M" = 2x2 maxpool (paper Table 2B)
 VGG_LAYERS: Tuple = (
@@ -61,24 +70,51 @@ def init_params(key: jax.Array, *, width_mult: float = 1.0,
     return p
 
 
-def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+_FOLD_IMPLS = ("fold_ws", "fold_os", "fold_auto")
 
 
 def forward(params: Dict[str, Any], x: jnp.ndarray,
-            impl: Optional[str] = None) -> jnp.ndarray:
-    """x: (N, 3, H, W) NCHW -> (N, classes) logits."""
+            impl: Optional[str] = None,
+            cache: Optional[ScheduleCache] = None) -> jnp.ndarray:
+    """x: (N, 3, H, W) NCHW -> (N, classes) logits.
+
+    With a ``cache`` and an explicit fold impl, each layer's block plan
+    (and, for ``fold_auto``, the dataflow) comes from the engine's
+    schedule registry: the 13 conv layers plan only their ~8 distinct
+    geometries (fold reuse).  With ``impl=None`` the backend default
+    applies regardless of ``cache`` — the reference conv stays the fast
+    CPU path (see ``kernels/ops.py``).
+    """
+    use_cache = cache is not None and impl in _FOLD_IMPLS
     for entry in VGG_LAYERS:
         if entry == "M":
-            x = _maxpool2(x)
+            x = maxpool2(x)
             continue
         name = entry[0]
         w, b = params[name]["w"], params[name]["b"]
-        x = conv2d(x, w, stride=1, pad=1, impl=impl)
+        if use_cache:
+            n_, c_, xh, xw = x.shape
+            nf, _, r, s = w.shape
+            sched = cache.schedule_for(ConvLoopNest(
+                n=n_, nf=nf, c=c_, r=r, s=s, x=xh, y=xw, stride=1, pad=1))
+            layer_impl = sched.impl() if impl == "fold_auto" else impl
+            x = conv2d(x, w, stride=1, pad=1, impl=layer_impl,
+                       plan=sched.plan)
+        else:
+            x = conv2d(x, w, stride=1, pad=1, impl=impl)
         x = jax.nn.relu(x + b[None, :, None, None])
-    n = x.shape[0]
-    x = x.reshape(n, -1)
-    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
-    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
-    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+    return vgg_head(params, x)
+
+
+def compile_forward(params: Dict[str, Any], *, img: int, batch: int = 1,
+                    policy: str = "auto",
+                    cache: Optional[ScheduleCache] = None,
+                    jit: bool = True) -> CompiledNetwork:
+    """Compile the whole VGG trunk+head into a static fold schedule.
+
+    Returns the engine's ``CompiledNetwork``: call it as ``net(params, x)``;
+    ``net.fold_reuse()`` reports the schedule-cache hit rate (the paper's
+    fold-reuse metric) and ``net.describe()`` the per-layer schedule table.
+    """
+    return compile_network(params, VGG_LAYERS, (batch, 3, img, img),
+                           policy=policy, cache=cache, jit=jit)

@@ -121,6 +121,26 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
                            wire_bytes=wbytes)
 
 
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a single dict; newer JAX returns a list with one dict
+    per computation.  Merge to one dict, summing values shared across
+    computations, so callers can keep using ``ca.get(...)``.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, dict):
+        return ca
+    merged: Dict[str, float] = {}
+    for entry in ca or ():
+        for k, v in (entry or {}).items():
+            try:
+                merged[k] = merged.get(k, 0.0) + float(v)
+            except (TypeError, ValueError):
+                merged.setdefault(k, v)
+    return merged
+
+
 @dataclasses.dataclass
 class RooflineReport:
     flops_per_dev: float
@@ -194,7 +214,7 @@ def roofline_terms(compiled, *, chips: int, model_flops: float = 0.0,
     undercounts every layer-stacked model by ~n_layers x.  The raw
     cost_analysis numbers are kept in the report as a cross-check."""
     from repro.hlo_cost import analyze_hlo
-    ca = compiled.cost_analysis()
+    ca = _cost_analysis_dict(compiled)
     text = hlo_text if hlo_text is not None else compiled.as_text()
     bytes_all = None
     try:

@@ -2,7 +2,8 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.folds import PEArray, decompose
 from repro.core.loopnest import ConvLoopNest, synthetic_suite

@@ -3,7 +3,8 @@ computes the right thing, not just the right counts)."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.folds import PEArray
 from repro.core.loopnest import ConvLoopNest, vgg16_conv_layers
