@@ -1,18 +1,31 @@
 """Fold-streamed kernel vs the GEMM (im2col) baseline the paper argues
-against: measured CPU wall time (relative) + modeled data movement.
+against, plus the PR-2 hot-path measurements: in-kernel WS reduction vs the
+PR-1 psum round-trip, fused vs unfused epilogues, and measured (autotuned)
+vs heuristic schedules.
 
-The traffic model is the paper's core claim quantified: im2col materializes
-the (N*P*Q, C*R*S) patch matrix (R*S x input duplication); the fold
-dataflow streams each unique input column once per image block.
+The traffic models are the paper's core claim quantified: im2col
+materializes the (N*P*Q, C*R*S) patch matrix (R*S x input duplication); the
+fold dataflow streams each unique input column once per image block; the
+in-kernel depth reduction (PR 2) additionally removes the partial-sum
+write+read that the PR-1 weight-stationary formulation staged in HBM, and
+the fused epilogue removes the pre-activation round-trip.
+
+``calibrate()`` is the methodology behind the constants discussion in
+``core/engine.py:dataflow_costs``: it races the three dataflow
+formulations per geometry (median-of-5, one warmup) and prints measured
+ratios next to the model's traffic ratios.
 """
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.loopnest import ConvLoopNest, synthetic_suite
+from repro.core.engine import (autotune_schedule, measure_schedule_ms,
+                               plan_and_dataflow)
+from repro.core.epilogue import Epilogue
+from repro.core.loopnest import ConvLoopNest
 from repro.core.mapping import plan_conv_blocks
-from repro.kernels.ops import conv2d
+from repro.kernels.ops import conv2d, conv2d_fused
 
 
 def traffic_model(cv: ConvLoopNest, bytes_per_elem: int = 4):
@@ -27,6 +40,29 @@ def traffic_model(cv: ConvLoopNest, bytes_per_elem: int = 4):
     return im2col * bytes_per_elem, fold * bytes_per_elem
 
 
+def dataflow_traffic(cv: ConvLoopNest, plan=None,
+                     bytes_per_elem: int = 4) -> dict:
+    """Modeled HBM bytes per dataflow formulation — delegates to the
+    engine's single source of truth so the benchmark can never diverge
+    from the model the engine actually ranks with."""
+    from repro.core.engine import dataflow_traffic_bytes
+    plan = plan or plan_conv_blocks(cv)
+    return dataflow_traffic_bytes(cv, plan, bytes_per_elem)
+
+
+def epilogue_traffic(cv: ConvLoopNest, pooled: bool = False,
+                     bytes_per_elem: int = 4) -> dict:
+    """Modeled post-conv HBM bytes: unfused re-reads the conv output for
+    bias/ReLU (and again for the pool); the fused epilogue writes only the
+    finished (possibly pooled) activation."""
+    out_b = cv.tensor_sizes()["output"] * bytes_per_elem
+    final = out_b // 4 if pooled else out_b
+    unfused = out_b + out_b + out_b               # conv write, epi read+write
+    if pooled:
+        unfused += out_b + final                  # pool read + pooled write
+    return {"unfused": unfused, "fused": final}
+
+
 def timed(fn, *args, reps=3):
     fn(*args).block_until_ready()
     t0 = time.perf_counter()
@@ -34,6 +70,115 @@ def timed(fn, *args, reps=3):
         out = fn(*args)
     out.block_until_ready()
     return (time.perf_counter() - t0) / reps
+
+
+# geometries small enough that interpret-mode Pallas stays in seconds but
+# large enough that kernel time dominates dispatch noise
+_MEASURE_SUITE = (
+    ConvLoopNest(n=1, nf=32, c=32, r=3, s=3, x=32, y=32, stride=1, pad=1),
+    ConvLoopNest(n=1, nf=64, c=64, r=3, s=3, x=16, y=16, stride=1, pad=1),
+    ConvLoopNest(n=1, nf=64, c=32, r=1, s=1, x=28, y=28, stride=2, pad=0),
+)
+
+
+def calibrate(reps: int = 5, verbose: bool = True) -> list:
+    """Measured dataflow ratios vs the cost model's traffic ratios — the
+    methodology recorded in ``core/engine.py:dataflow_costs``.
+
+    Per geometry: median-of-``reps`` (one warmup) for the in-kernel WS, the
+    PR-1 psum WS, and OS formulations, all under the current backend's
+    interpret policy, against a plan shrunk so every geometry has g_c > 1
+    (the regime where the psum round-trip actually bites).
+    """
+    rows = []
+    for cv in _MEASURE_SUITE:
+        plan = plan_conv_blocks(cv).clamped(cv.nf, cv.c, cv.p)
+        if plan.grid[1] == 1 and cv.c > 1:        # force multi-depth folds
+            import dataclasses as _dc
+            c_b = max(cv.c // 2, 1)
+            plan = _dc.replace(plan, c_block=c_b,
+                               grid=(plan.grid[0], -(-cv.c // c_b),
+                                     plan.grid[2]))
+        ms = {df: measure_schedule_ms(cv, plan, df, reps=reps)
+              for df in ("weight_stationary", "weight_stationary_psum",
+                         "output_stationary")}
+        model = dataflow_traffic(cv, plan)
+        row = {"nest": str(cv), "g": plan.grid, **{f"{k}_ms": v
+               for k, v in ms.items()},
+               "model_psum_ratio": model["weight_stationary_psum"]
+               / model["weight_stationary"],
+               "measured_psum_ratio": ms["weight_stationary_psum"]
+               / ms["weight_stationary"]}
+        rows.append(row)
+        if verbose:
+            print(f"calibrate,{row['nest']},g={row['g']},"
+                  f"ws_ms={ms['weight_stationary']:.1f},"
+                  f"ws_psum_ms={ms['weight_stationary_psum']:.1f},"
+                  f"os_ms={ms['output_stationary']:.1f},"
+                  f"model_psum_ratio={row['model_psum_ratio']:.2f},"
+                  f"measured_psum_ratio={row['measured_psum_ratio']:.2f}")
+    return rows
+
+
+def bench_fused(reps: int = 3, verbose: bool = True) -> list:
+    """Fused in-kernel epilogue vs conv + separate XLA bias/ReLU/pool."""
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for cv, pooled in ((_MEASURE_SUITE[0], True), (_MEASURE_SUITE[1], False)):
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (cv.n, cv.c, cv.x, cv.y), jnp.float32)
+        w = jax.random.normal(k2, (cv.nf, cv.c, cv.r, cv.s), jnp.float32)
+        b = jax.random.normal(k3, (cv.nf,), jnp.float32)
+        epi = Epilogue(bias=True, relu=True, pool="max2" if pooled else None)
+
+        def unfused(x, w, b, _cv=cv, _pooled=pooled):
+            y = conv2d(x, w, stride=_cv.stride, pad=_cv.pad, impl="fold_ws")
+            y = jax.nn.relu(y + b[None, :, None, None])
+            if _pooled:
+                y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                          (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+            return y
+
+        def fused(x, w, b, _cv=cv, _epi=epi):
+            return conv2d_fused(x, w, b, stride=_cv.stride, pad=_cv.pad,
+                                epilogue=_epi, impl="fold_ws")
+
+        t_un = timed(jax.jit(unfused), x, w, b, reps=reps)
+        t_fu = timed(jax.jit(fused), x, w, b, reps=reps)
+        tm = epilogue_traffic(cv, pooled)
+        row = {"nest": str(cv), "pooled": pooled,
+               "unfused_ms": t_un * 1e3, "fused_ms": t_fu * 1e3,
+               "speedup": t_un / t_fu,
+               "bytes_unfused": tm["unfused"], "bytes_fused": tm["fused"]}
+        rows.append(row)
+        if verbose:
+            print(f"fused_epilogue,{row['nest']},pool={pooled},"
+                  f"unfused_ms={row['unfused_ms']:.1f},"
+                  f"fused_ms={row['fused_ms']:.1f},"
+                  f"speedup={row['speedup']:.2f}x,"
+                  f"bytes_delta={tm['unfused'] / tm['fused']:.2f}x")
+    return rows
+
+
+def bench_tuned(reps: int = 3, verbose: bool = True) -> dict:
+    """Measured (autotuned) winner vs the analytical heuristic schedule."""
+    cv = _MEASURE_SUITE[1]
+    plan, dataflow = plan_and_dataflow(cv)
+    heur_ms = measure_schedule_ms(cv, plan, dataflow, reps=reps)
+    sched = autotune_schedule(cv, reps=reps)
+    row = {"nest": str(cv),
+           "heuristic": f"{dataflow}/p{plan.p_block}/c{plan.c_block}",
+           "heuristic_ms": heur_ms,
+           "tuned": f"{sched.dataflow}/p{sched.plan.p_block}"
+                    f"/c{sched.plan.c_block}",
+           "tuned_ms": sched.measured_ms,
+           "speedup": heur_ms / sched.measured_ms,
+           "candidates": list(sched.timings)}
+    if verbose:
+        print(f"autotune,{row['nest']},heuristic={row['heuristic']}"
+              f"@{heur_ms:.1f}ms,tuned={row['tuned']}"
+              f"@{sched.measured_ms:.1f}ms,speedup={row['speedup']:.2f}x")
+    return row
 
 
 def main(csv=False):
@@ -56,6 +201,12 @@ def main(csv=False):
               f"{t_xla*1e3:.1f},{t_im*1e3:.1f},{t_dir*1e3:.1f}")
     print("# traffic_ratio > 1: fold dataflow moves less data than im2col "
           "(paper §II claim, quantified)")
+    print("# in-kernel reduction vs PR-1 psum staging (measured + model)")
+    calibrate()
+    print("# fused epilogue vs separate XLA ops (measured + bytes model)")
+    bench_fused()
+    print("# measured autotune vs analytical heuristic")
+    bench_tuned()
 
 
 if __name__ == "__main__":

@@ -1,9 +1,31 @@
 """Benchmark aggregator: one section per paper table/figure + the roofline
-report from the dry-run artifacts.
+report from the dry-run artifacts, plus a machine-readable perf snapshot.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run --micro    # CI micro-bench only
+
+Both modes finish by writing ``BENCH_vgg.json`` (per-image latency of the
+auto/fused/unfused engine paths, schedule-cache hit rate, and the
+bytes-moved model for full-size VGG-16) so CI can track the perf
+trajectory per PR; ``--micro`` runs just that interpreter-mode micro-bench.
 """
+import json
+import sys
 import time
+
+BENCH_JSON = "BENCH_vgg.json"
+
+
+def emit_bench_json(path: str = BENCH_JSON) -> dict:
+    from benchmarks import fig9_vgg
+    summary = fig9_vgg.bench_summary()
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2)
+    lat = summary["latency"]
+    print(f"# wrote {path}: fused {lat['pallas_fused_per_img_s']*1e3:.1f}"
+          f"ms/img (speedup {lat['fused_speedup']}x vs unfused), "
+          f"hit_rate={summary['fold_reuse']['hit_rate']}")
+    return summary
 
 
 def main() -> None:
@@ -18,6 +40,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench.main),
         ("roofline_16x16", lambda: roofline_report.main(mesh="16x16")),
         ("roofline_2x16x16", lambda: roofline_report.main(mesh="2x16x16")),
+        ("bench_json", emit_bench_json),
     ]
     for name, fn in sections:
         t0 = time.perf_counter()
@@ -29,5 +52,16 @@ def main() -> None:
         print(f"# [{name}: {time.perf_counter()-t0:.2f}s]")
 
 
+def micro() -> None:
+    """The CI entry point: interpreter-mode micro-bench + BENCH_vgg.json."""
+    t0 = time.perf_counter()
+    print("===== micro-bench (interpreter mode) =====")
+    emit_bench_json()
+    print(f"# [micro: {time.perf_counter()-t0:.2f}s]")
+
+
 if __name__ == "__main__":
-    main()
+    if "--micro" in sys.argv[1:]:
+        micro()
+    else:
+        main()

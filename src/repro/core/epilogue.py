@@ -1,0 +1,91 @@
+"""Fused epilogue descriptor for the fold-streamed conv kernels.
+
+The paper keeps partial-sum folds on-fabric (Fig 5: reserved-column
+accumulation) and streams finished outputs straight into the next layer's
+image folds.  The software analogue is flushing the per-layer epilogue —
+bias add, ReLU, and VGG's 2x2/2 max-pool — *inside* the Pallas kernel at
+the moment the last depth fold finishes, so a conv→bias→ReLU(→pool) chain
+is one ``pallas_call`` and the pre-activation tensor never round-trips
+through HBM.
+
+``Epilogue`` is a frozen (hashable) dataclass so it can ride along as a
+static jit argument and as part of the engine's kernel memo keys
+(``ScheduleCache.kernel_for``).  ``apply_epilogue`` is the pure-jnp
+reference used by the non-Pallas impls and by the fused op's recompute
+backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Epilogue", "apply_epilogue", "epilogue_out_hw", "FUSED_RELU",
+           "FUSED_RELU_POOL"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """What the kernel does to a finished output fold at flush time.
+
+    bias  — add a per-filter bias (the caller supplies the vector).
+    relu  — clamp at zero.
+    pool  — ``"max2"`` fuses a 2x2/2 max-pool (windows never straddle fold
+            boundaries: the kernel rounds the P block to even).  ``None``
+            leaves the spatial dims untouched.
+    """
+    bias: bool = False
+    relu: bool = False
+    pool: Optional[str] = None
+
+    def __post_init__(self):
+        if self.pool not in (None, "max2"):
+            raise ValueError(f"unknown pool {self.pool!r} (want None|'max2')")
+
+    @property
+    def identity(self) -> bool:
+        return not (self.bias or self.relu or self.pool)
+
+    def __str__(self) -> str:
+        parts = [n for n in ("bias", "relu") if getattr(self, n)]
+        if self.pool:
+            parts.append(self.pool)
+        return "+".join(parts) or "id"
+
+
+FUSED_RELU = Epilogue(bias=True, relu=True)
+FUSED_RELU_POOL = Epilogue(bias=True, relu=True, pool="max2")
+
+
+def epilogue_out_hw(epi: Optional["Epilogue"], p: int, q: int
+                    ) -> Tuple[int, int]:
+    """Output spatial extent after the epilogue (floor semantics for pool)."""
+    if epi is not None and epi.pool == "max2":
+        return p // 2, q // 2
+    return p, q
+
+
+def maxpool2x2(y: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max-pool over the trailing two dims (floor on odd extents)."""
+    *lead, p, q = y.shape
+    y = y[..., : p // 2 * 2, : q // 2 * 2]
+    y = y.reshape(*lead, p // 2, 2, q // 2, 2)
+    return y.max(axis=(-3, -1))
+
+
+def apply_epilogue(y: jnp.ndarray, b: Optional[jnp.ndarray],
+                   epi: Optional["Epilogue"]) -> jnp.ndarray:
+    """Reference epilogue on an NCHW conv output (oracle for the kernels)."""
+    if epi is None or epi.identity:
+        return y
+    if epi.bias:
+        if b is None:
+            raise ValueError("Epilogue(bias=True) needs a bias vector")
+        y = y + b[None, :, None, None].astype(y.dtype)
+    if epi.relu:
+        y = jax.nn.relu(y)
+    if epi.pool == "max2":
+        y = maxpool2x2(y)
+    return y

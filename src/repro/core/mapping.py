@@ -38,8 +38,17 @@ __all__ = [
     "TemporalMap",
     "MappingPlan",
     "ConvBlockPlan",
+    "conv_working_set",
     "plan_conv_blocks",
+    "WS_ACC_BYTES_LIMIT",
 ]
+
+# Ceiling for the weight-stationary kernel's full-height VMEM accumulator
+# (nf_block x P x Q fp32).  Conservative physical-VMEM bound: beyond it the
+# kernel falls back to psum staging (or output-stationary when an epilogue
+# is fused) instead of allocating an uncompilable scratch, and the engine's
+# cost model prices the same fallback (engine.dataflow_traffic_bytes).
+WS_ACC_BYTES_LIMIT = 16 * 1024 * 1024
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +156,17 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def conv_working_set(conv: ConvLoopNest, nf_block: int, c_block: int,
+                     p_block: int, bytes_per_elem: int = 4) -> int:
+    """VMEM bytes of one grid step's working set: weight fold + streamed
+    image rows + block accumulator (shared by the block solver and the
+    autotuner's candidate variants)."""
+    w = nf_block * c_block * conv.r * conv.s
+    img = c_block * (p_block * conv.stride + conv.r) * conv.padded_y
+    acc = nf_block * p_block * conv.q
+    return (w + img + acc) * bytes_per_elem
+
+
 def plan_conv_blocks(conv: ConvLoopNest,
                      vmem_limit: int = 64 * 1024 * 1024,
                      mxu: int = 128,
@@ -163,10 +183,7 @@ def plan_conv_blocks(conv: ConvLoopNest,
     p_block = min(conv.p, max(1, 512 // max(conv.q, 1)))  # ~512 out positions
 
     def working_set(c_b: int) -> int:
-        w = nf_block * c_b * conv.r * conv.s
-        img = c_b * (p_block * conv.stride + conv.r) * conv.padded_y
-        acc = nf_block * p_block * conv.q
-        return (w + img + acc) * bytes_per_elem
+        return conv_working_set(conv, nf_block, c_b, p_block, bytes_per_elem)
 
     c_block = min(conv.c, 512)
     while c_block > 1 and working_set(c_block) > vmem_limit // 2:

@@ -1,22 +1,37 @@
 """Fold-streamed convolution Pallas kernel (the paper's technique on TPU).
 
 Two dataflows, selected by grid ordering — both derived from the paper's
-Filter-Fold / Image-Fold / Image-Block decomposition (DESIGN.md §3):
+Filter-Fold / Image-Fold / Image-Block decomposition (DESIGN.md §3), and
+both reducing depth folds *in-kernel* (the paper's Fig 5 reserved-column
+accumulation collapses into a VMEM accumulator; no partial-sum tensor is
+ever materialized in HBM):
 
 * ``weight_stationary`` (paper-faithful): grid (N, NF folds, C folds, P
   folds) with the P (image-fold) dimension innermost.  The weight block —
   the Filter Fold — has an index map that is constant along P, so Pallas
-  keeps it resident in VMEM while image folds stream through; each depth
-  fold (Image Block) emits a partial-sum fold to HBM, and the folds are
-  accumulated afterwards — exactly the paper's Fig 5 (partial-sum folds
-  staged in L1, reduced at the end).
+  keeps it resident in VMEM while image folds stream through.  Depth folds
+  are accumulated into a full-height VMEM scratch (one slice per P fold);
+  the output block's index map is constant along both C and P, so the
+  finished output stays resident across the whole (C, P) sweep and is
+  written to HBM exactly once per (N, NF-fold) — the partial-sum HBM
+  write+read of the original formulation disappears.
 
 * ``output_stationary`` (beyond-paper optimized): grid (N, NF folds, P
   folds, C folds) with the depth dimension innermost; partial sums stay in
-  a VMEM accumulator (the reserved-column in-fabric reduction collapses
-  into the accumulator) and the output is written exactly once.  This
-  trades weight re-fetch (x P folds) for eliminating the partial-sum HBM
-  round-trip; `benchmarks/kernel_bench.py` napkin-maths the crossover.
+  a block-sized VMEM accumulator and the output is written exactly once.
+  This trades weight re-fetch (x P folds) for a block-sized (rather than
+  full-height) accumulator; ``core/engine.py:dataflow_costs`` prices the
+  trade and ``autotune_schedule`` can measure it.
+
+Both kernels flush an optional fused **epilogue** (bias add, ReLU, 2x2/2
+max-pool — ``core/epilogue.py``) at the moment the last depth fold
+finishes, so a conv→bias→ReLU(→pool) chain is one ``pallas_call`` and the
+pre-activation tensor never leaves VMEM.
+
+``weight_stationary_psum`` keeps the original PR-1 formulation — each
+depth fold emits a partial-sum fold to HBM, reduced afterwards with XLA —
+as a benchmarking baseline only (``benchmarks/kernel_bench.py`` reports
+the bytes-moved delta); the engine never selects it.
 
 The in-kernel compute realizes the fold interaction of Fig 4: for each of
 the R*S filter taps, a strided window of the resident image rows is
@@ -37,23 +52,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.epilogue import Epilogue, epilogue_out_hw, maxpool2x2
 from repro.core.loopnest import ConvLoopNest
-from repro.core.mapping import ConvBlockPlan, plan_conv_blocks
+from repro.core.mapping import (WS_ACC_BYTES_LIMIT, ConvBlockPlan,
+                                plan_conv_blocks)
 
-__all__ = ["conv2d_folded", "default_plan"]
+__all__ = ["conv2d_folded", "default_plan", "DATAFLOWS"]
+
+DATAFLOWS = ("weight_stationary", "output_stationary")
 
 
-def _ws_kernel(x_ref, w_ref, out_ref, *, r: int, s: int, stride: int,
-               p_block: int, q: int, n_p: int):
-    """Weight-stationary fold interaction. Grid: (N, nf, c, p); p fastest."""
-    i_p = pl.program_id(3)
-    xv = x_ref[0]                               # (c_b, Xpad, Ypad) resident
-    acc = jnp.zeros((out_ref.shape[2], p_block, q), dtype=jnp.float32)
+def _fold_partial(xv, w_ref, i_p, *, r: int, s: int, stride: int,
+                  p_block: int, q: int):
+    """One fold interaction (Fig 4): R*S stationary taps against a strided
+    window of the resident image rows.  Returns (nf_b, p_block, q) fp32."""
+    nf_b = w_ref.shape[0]
     row0 = i_p * p_block * stride
     rows = (p_block - 1) * stride + r
     xwin = jax.lax.dynamic_slice(
         xv, (0, row0, 0), (xv.shape[0], rows, xv.shape[2]))
-    for ri in range(r):                         # R*S stationary taps
+    acc = jnp.zeros((nf_b, p_block, q), dtype=jnp.float32)
+    for ri in range(r):
         for si in range(s):
             win = xwin[:, ri:ri + p_block * stride:stride,
                        si:si + q * stride:stride]        # (c_b, p_b, Q)
@@ -64,41 +83,84 @@ def _ws_kernel(x_ref, w_ref, out_ref, *, r: int, s: int, stride: int,
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32,
             ).reshape(acc.shape)
-    out_ref[0, 0] = acc.astype(out_ref.dtype)
+    return acc
 
 
-def _os_kernel(x_ref, w_ref, out_ref, acc_ref, *, r: int, s: int,
-               stride: int, p_block: int, q: int, n_c: int):
-    """Output-stationary variant. Grid: (N, nf, p, c); c fastest."""
-    i_p = pl.program_id(2)
-    i_c = pl.program_id(3)
+def _flush_value(v, b_ref, epi: Epilogue):
+    """Apply the fused epilogue to a finished fp32 fold (nf_b, p_b, q)."""
+    if epi.bias:
+        v = v + b_ref[:, 0].astype(jnp.float32)[:, None, None]
+    if epi.relu:
+        v = jnp.maximum(v, 0.0)
+    if epi.pool == "max2":
+        v = maxpool2x2(v)        # p_b forced even: windows stay in-fold
+    return v
+
+
+def _ws_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, r: int, s: int,
+               stride: int, p_block: int, q: int, n_c: int, epi: Epilogue):
+    """Weight-stationary with in-kernel depth reduction.
+
+    Grid: (N, nf, c, p); p fastest.  ``acc_ref`` holds the full output
+    height for this (N, nf-fold) — the software form of the paper's
+    reserved-column partial sums staged on-fabric.  The output block is
+    revisited contiguously across the whole (c, p) sweep and flushed (with
+    the epilogue) as each P slice finishes its last depth fold.
+    """
+    i_c = pl.program_id(2)
+    i_p = pl.program_id(3)
+    part = _fold_partial(x_ref[0], w_ref, i_p, r=r, s=s, stride=stride,
+                         p_block=p_block, q=q)
+    row0 = i_p * p_block
 
     @pl.when(i_c == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[:, pl.ds(row0, p_block), :] = part
 
-    xv = x_ref[0]
-    row0 = i_p * p_block * stride
-    rows = (p_block - 1) * stride + r
-    xwin = jax.lax.dynamic_slice(
-        xv, (0, row0, 0), (xv.shape[0], rows, xv.shape[2]))
-    acc = acc_ref[...]
-    for ri in range(r):
-        for si in range(s):
-            win = xwin[:, ri:ri + p_block * stride:stride,
-                       si:si + q * stride:stride]
-            tap = w_ref[:, :, ri, si]
-            acc += jax.lax.dot_general(
-                tap.astype(jnp.float32),
-                win.reshape(win.shape[0], -1).astype(jnp.float32),
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            ).reshape(acc.shape)
-    acc_ref[...] = acc
+    @pl.when(i_c > 0)
+    def _accumulate():
+        acc_ref[:, pl.ds(row0, p_block), :] += part
 
     @pl.when(i_c == n_c - 1)
     def _flush():
-        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+        v = _flush_value(acc_ref[:, pl.ds(row0, p_block), :], b_ref, epi)
+        if epi.pool == "max2":
+            out_ref[0, :, pl.ds(i_p * (p_block // 2), p_block // 2), :] = (
+                v.astype(out_ref.dtype))
+        else:
+            out_ref[0, :, pl.ds(row0, p_block), :] = v.astype(out_ref.dtype)
+
+
+def _os_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, r: int, s: int,
+               stride: int, p_block: int, q: int, n_c: int, epi: Epilogue):
+    """Output-stationary variant. Grid: (N, nf, p, c); c fastest."""
+    i_p = pl.program_id(2)
+    i_c = pl.program_id(3)
+    part = _fold_partial(x_ref[0], w_ref, i_p, r=r, s=s, stride=stride,
+                         p_block=p_block, q=q)
+
+    @pl.when(i_c == 0)
+    def _init():
+        acc_ref[...] = part
+
+    @pl.when(i_c > 0)
+    def _accumulate():
+        acc_ref[...] += part
+
+    @pl.when(i_c == n_c - 1)
+    def _flush():
+        out_ref[0] = _flush_value(acc_ref[...], b_ref,
+                                  epi).astype(out_ref.dtype)
+
+
+def _ws_psum_kernel(x_ref, w_ref, out_ref, *, r: int, s: int, stride: int,
+                    p_block: int, q: int):
+    """PR-1 weight-stationary formulation: each depth fold emits a
+    partial-sum fold to HBM (benchmarking baseline only)."""
+    i_p = pl.program_id(3)
+    acc = _fold_partial(x_ref[0], w_ref, i_p, r=r, s=s, stride=stride,
+                        p_block=p_block, q=q)
+    out_ref[0, 0] = acc.astype(out_ref.dtype)
 
 
 def default_plan(conv: ConvLoopNest, **kw) -> ConvBlockPlan:
@@ -110,16 +172,21 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
                   plan: Optional[ConvBlockPlan] = None,
                   dataflow: str = "weight_stationary",
                   interpret: Optional[bool] = None,
-                  out_dtype=None) -> jnp.ndarray:
+                  out_dtype=None,
+                  bias: Optional[jnp.ndarray] = None,
+                  epilogue: Optional[Epilogue] = None) -> jnp.ndarray:
     """Run the fold-streamed conv kernel on a PRE-PADDED input.
 
-    x_padded: (N, C, Xp, Yp)   w: (NF, C, R, S)   -> (N, NF, P, Q)
+    x_padded: (N, C, Xp, Yp)   w: (NF, C, R, S)   -> (N, NF, P', Q')
+    where (P', Q') = (P, Q) or (P//2, Q//2) when ``epilogue.pool`` fuses
+    the 2x2/2 max-pool.
 
     ``plan`` may come from the engine's schedule cache and describe a
     *larger* geometry sharing this layer's filter-fold key; it is clamped
     to the actual dims here, which is what makes schedule reuse exact.
     ``interpret=None`` resolves via the engine's backend policy (real
-    lowering on TPU, interpreter elsewhere).
+    lowering on TPU, interpreter elsewhere).  ``epilogue`` (with ``bias``
+    when ``epilogue.bias``) is flushed in-kernel — see ``core/epilogue.py``.
     """
     n, c, xp_, yp_ = x_padded.shape
     nf, cw, r, s = w.shape
@@ -127,6 +194,11 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     p = (xp_ - r) // stride + 1
     q = (yp_ - s) // stride + 1
     out_dtype = out_dtype or x_padded.dtype
+    epi = epilogue or Epilogue()
+    if epi.bias and bias is None:
+        raise ValueError("epilogue.bias=True needs a bias vector")
+    if epi.pool == "max2" and (p < 2 or q < 2):
+        raise ValueError(f"cannot fuse 2x2 pool into a {p}x{q} output")
     if interpret is None:
         from repro.core.engine import pallas_interpret_default
         interpret = pallas_interpret_default()
@@ -137,22 +209,41 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     plan = plan.clamped(nf, c, p)
     nf_b, c_b, p_b = plan.nf_block, plan.c_block, plan.p_block
     g_nf, g_c, g_p = plan.grid
+    if epi.pool == "max2" and p_b % 2:
+        # pool windows must not straddle P-fold boundaries
+        p_b += 1
+        g_p = -(-p // p_b)
 
     # Pad every tiled dim to an exact block multiple: zero channels/filters
     # contribute nothing to the accumulation, and extra bottom rows only
     # produce out-of-range outputs that are sliced away.  This keeps the
     # in-kernel dynamic_slice un-clamped (fold geometry stays exact).
+    # Aligned layers skip the pads entirely (no copy).
     nf_pad, c_pad, p_pad = g_nf * nf_b, g_c * c_b, g_p * p_b
     rows_needed = (p_pad - 1) * stride + r
-    x_padded = jnp.pad(x_padded, ((0, 0), (0, c_pad - c),
-                                  (0, max(rows_needed - xp_, 0)), (0, 0)))
-    w = jnp.pad(w, ((0, nf_pad - nf), (0, c_pad - c), (0, 0), (0, 0)))
+    if c_pad != c or rows_needed > xp_:
+        x_padded = jnp.pad(x_padded, ((0, 0), (0, c_pad - c),
+                                      (0, max(rows_needed - xp_, 0)), (0, 0)))
+    if nf_pad != nf or c_pad != c:
+        w = jnp.pad(w, ((0, nf_pad - nf), (0, c_pad - c), (0, 0), (0, 0)))
     xp_r = x_padded.shape[2]
 
-    if dataflow == "weight_stationary":
-        # out: one partial-sum fold per depth fold (paper Fig 5)
-        kern = functools.partial(_ws_kernel, r=r, s=s, stride=stride,
-                                 p_block=p_b, q=q, n_p=g_p)
+    if (dataflow == "weight_stationary"
+            and nf_b * p_pad * q * 4 > WS_ACC_BYTES_LIMIT):
+        # the full-height fp32 accumulator would not fit VMEM: fall back
+        # to psum staging (or to the block-accumulator OS kernel when an
+        # epilogue must flush in-kernel) — mirrored by the spill price in
+        # ``core/engine.py:dataflow_traffic_bytes``
+        dataflow = ("weight_stationary_psum" if epi.identity
+                    else "output_stationary")
+
+    if dataflow == "weight_stationary_psum":
+        if not epi.identity:
+            raise ValueError("the legacy psum dataflow has no fused epilogue")
+        # out: one partial-sum fold per depth fold (paper Fig 5, staged in
+        # HBM — the formulation the in-kernel reduction replaces)
+        kern = functools.partial(_ws_psum_kernel, r=r, s=s, stride=stride,
+                                 p_block=p_b, q=q)
         partial_sums = pl.pallas_call(
             kern,
             grid=(n, g_nf, g_c, g_p),
@@ -168,12 +259,50 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
                                            out_dtype),
             interpret=interpret,
         )(x_padded, w)
-        # multi-depth reduce of the partial-sum folds (paper Fig 5)
+        # multi-depth reduce of the partial-sum folds, paid through HBM
         return partial_sums.sum(axis=0)[:, :nf, :p].astype(out_dtype)
 
-    if dataflow == "output_stationary":
+    if dataflow not in DATAFLOWS:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+
+    if epi.bias:
+        b_arr = bias.astype(jnp.float32).reshape(nf, 1)
+        if nf_pad != nf:
+            b_arr = jnp.pad(b_arr, ((0, nf_pad - nf), (0, 0)))
+    else:
+        b_arr = jnp.zeros((nf_pad, 1), jnp.float32)
+
+    pooled = epi.pool == "max2"
+    p_o_pad = p_pad // 2 if pooled else p_pad
+    q_o = q // 2 if pooled else q
+    p_valid, q_valid = epilogue_out_hw(epi, p, q)
+
+    if dataflow == "weight_stationary":
+        kern = functools.partial(_ws_kernel, r=r, s=s, stride=stride,
+                                 p_block=p_b, q=q, n_c=g_c, epi=epi)
+        out = pl.pallas_call(
+            kern,
+            grid=(n, g_nf, g_c, g_p),
+            in_specs=[
+                pl.BlockSpec((1, c_b, xp_r, yp_),
+                             lambda b, f, cc, pp: (b, cc, 0, 0)),
+                pl.BlockSpec((nf_b, c_b, r, s),
+                             lambda b, f, cc, pp: (f, cc, 0, 0)),
+                pl.BlockSpec((nf_b, 1), lambda b, f, cc, pp: (f, 0)),
+            ],
+            # constant along (c, p): the finished output stays resident in
+            # VMEM for the whole sweep and hits HBM exactly once
+            out_specs=pl.BlockSpec((1, nf_b, p_o_pad, q_o),
+                                   lambda b, f, cc, pp: (b, f, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((n, nf_pad, p_o_pad, q_o),
+                                           out_dtype),
+            scratch_shapes=[pltpu.VMEM((nf_b, p_pad, q), jnp.float32)],
+            interpret=interpret,
+        )(x_padded, w, b_arr)
+    else:  # output_stationary
+        p_b_o = p_b // 2 if pooled else p_b
         kern = functools.partial(_os_kernel, r=r, s=s, stride=stride,
-                                 p_block=p_b, q=q, n_c=g_c)
+                                 p_block=p_b, q=q, n_c=g_c, epi=epi)
         out = pl.pallas_call(
             kern,
             grid=(n, g_nf, g_p, g_c),
@@ -182,13 +311,13 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
                              lambda b, f, pp, cc: (b, cc, 0, 0)),
                 pl.BlockSpec((nf_b, c_b, r, s),
                              lambda b, f, pp, cc: (f, cc, 0, 0)),
+                pl.BlockSpec((nf_b, 1), lambda b, f, pp, cc: (f, 0)),
             ],
-            out_specs=pl.BlockSpec((1, nf_b, p_b, q),
+            out_specs=pl.BlockSpec((1, nf_b, p_b_o, q_o),
                                    lambda b, f, pp, cc: (b, f, pp, 0)),
-            out_shape=jax.ShapeDtypeStruct((n, nf_pad, p_pad, q), out_dtype),
+            out_shape=jax.ShapeDtypeStruct((n, nf_pad, p_o_pad, q_o),
+                                           out_dtype),
             scratch_shapes=[pltpu.VMEM((nf_b, p_b, q), jnp.float32)],
             interpret=interpret,
-        )(x_padded, w)
-        return out[:, :nf, :p]
-
-    raise ValueError(f"unknown dataflow {dataflow!r}")
+        )(x_padded, w, b_arr)
+    return out[:, :nf, :p_valid, :q_valid]

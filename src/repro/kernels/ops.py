@@ -29,15 +29,42 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.epilogue import Epilogue, apply_epilogue
 from repro.kernels import ref as _ref
 from repro.kernels.conv1d_causal import conv1d_causal_folded
 from repro.kernels.conv2d_ws import conv2d_folded
 
-__all__ = ["conv2d", "conv1d_causal", "default_conv_impl"]
+__all__ = ["conv2d", "conv2d_fused", "conv1d_causal", "default_conv_impl"]
 
 
 def default_conv_impl() -> str:
     return "fold_auto" if jax.default_backend() == "tpu" else "direct"
+
+
+# "fold_ws_psum" is the PR-1 weight-stationary formulation (partial-sum
+# folds staged in HBM, reduced with XLA) — kept for benchmarking only
+_FOLD_IMPLS = ("fold_ws", "fold_os", "fold_auto", "fold_ws_psum")
+
+
+def _resolve_fold_dataflow(x, w, stride: int, pad: int, impl: str, plan):
+    """Map a fold impl string to (plan, dataflow) for the Pallas kernel."""
+    if impl == "fold_ws_psum":
+        return plan, "weight_stationary_psum"
+    if impl == "fold_auto":
+        # one-shot engine planning (use models via the engine's
+        # ScheduleCache / compile_network to amortize this); a supplied
+        # plan is kept and only the dataflow is selected against it
+        from repro.core.engine import plan_and_dataflow, select_dataflow
+        from repro.core.loopnest import ConvLoopNest
+        n, c, xh, xw = x.shape
+        nf, _, r, s = w.shape
+        cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s, x=xh, y=xw,
+                          stride=stride, pad=pad)
+        if plan is None:
+            return plan_and_dataflow(cv)
+        return plan, select_dataflow(cv, plan)
+    return plan, ("weight_stationary" if impl == "fold_ws"
+                  else "output_stationary")
 
 
 def _conv2d_fwd_impl(x, w, stride: int, pad: int, impl: str,
@@ -50,24 +77,8 @@ def _conv2d_fwd_impl(x, w, stride: int, pad: int, impl: str,
         return _ref.conv2d_direct(x, w, stride, pad)
     if impl == "im2col":
         return _ref.conv2d_im2col(x, w, stride, pad)
-    if impl in ("fold_ws", "fold_os", "fold_auto"):
-        if impl == "fold_auto":
-            # one-shot engine planning (use models via the engine's
-            # ScheduleCache / compile_network to amortize this); a supplied
-            # plan is kept and only the dataflow is selected against it
-            from repro.core.engine import plan_and_dataflow, select_dataflow
-            from repro.core.loopnest import ConvLoopNest
-            n, c, xh, xw = x.shape
-            nf, _, r, s = w.shape
-            cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s, x=xh, y=xw,
-                              stride=stride, pad=pad)
-            if plan is None:
-                plan, dataflow = plan_and_dataflow(cv)
-            else:
-                dataflow = select_dataflow(cv, plan)
-        else:
-            dataflow = ("weight_stationary" if impl == "fold_ws"
-                        else "output_stationary")
+    if impl in _FOLD_IMPLS:
+        plan, dataflow = _resolve_fold_dataflow(x, w, stride, pad, impl, plan)
         xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
         return conv2d_folded(xp, w, stride=stride, dataflow=dataflow,
                              plan=plan, interpret=interpret)
@@ -126,6 +137,72 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0,
     """
     return _conv2d(x, w, stride, pad, impl or default_conv_impl(), plan,
                    interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused conv + epilogue (one pallas_call per conv→bias→ReLU(→pool) chain)
+# ---------------------------------------------------------------------------
+
+
+def _conv2d_fused_fwd_impl(x, w, b, stride: int, pad: int, epi: Epilogue,
+                           impl: str, plan, interpret):
+    if impl in _FOLD_IMPLS:
+        plan, dataflow = _resolve_fold_dataflow(x, w, stride, pad, impl, plan)
+        xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        return conv2d_folded(xp, w, stride=stride, dataflow=dataflow,
+                             plan=plan, interpret=interpret,
+                             bias=b, epilogue=epi)
+    # non-Pallas impls: run the plain conv, then the reference epilogue
+    # chain (XLA fuses it into the same computation anyway)
+    y = _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret)
+    return apply_epilogue(y, b, epi)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _conv2d_fused(x, w, b, stride, pad, epi, impl, plan, interpret):
+    return _conv2d_fused_fwd_impl(x, w, b, stride, pad, epi, impl, plan,
+                                  interpret)
+
+
+def _conv2d_fused_vjp_fwd(x, w, b, stride, pad, epi, impl, plan, interpret):
+    out = _conv2d_fused_fwd_impl(x, w, b, stride, pad, epi, impl, plan,
+                                 interpret)
+    return out, (x, w, b)
+
+
+def _conv2d_fused_vjp_bwd(stride, pad, epi, impl, plan, interpret, res, g):
+    # rematerialize through the reference chain: the Pallas kernel never
+    # stores pre-activation intermediates, so the backward pass recomputes
+    # them (standard rematerialization; every impl stays trainable)
+    x, w, b = res
+
+    def ref_chain(x, w, b):
+        return apply_epilogue(_ref.conv2d_direct(x, w, stride, pad), b, epi)
+
+    _, vjp = jax.vjp(ref_chain, x, w, b)
+    return vjp(g)
+
+
+_conv2d_fused.defvjp(_conv2d_fused_vjp_fwd, _conv2d_fused_vjp_bwd)
+
+
+def conv2d_fused(x: jnp.ndarray, w: jnp.ndarray,
+                 b: Optional[jnp.ndarray] = None, *, stride: int = 1,
+                 pad: int = 0, epilogue: Optional[Epilogue] = None,
+                 impl: Optional[str] = None, plan=None,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Convolution with the epilogue flushed in-kernel.  x: NCHW, w: OIHW,
+    b: (NF,) per-filter bias (required when ``epilogue.bias``).
+
+    On the fold impls the epilogue executes inside the conv's single
+    ``pallas_call`` at partial-sum flush time (``kernels/conv2d_ws.py``);
+    the whole conv→bias→ReLU(→pool) chain is one kernel launch and the
+    pre-activation tensor never reaches HBM.  Output is (N, NF, P, Q), or
+    (N, NF, P//2, Q//2) when ``epilogue.pool`` fuses the 2x2 max-pool.
+    """
+    epi = epilogue if epilogue is not None else Epilogue(bias=b is not None)
+    return _conv2d_fused(x, w, b, stride, pad, epi,
+                         impl or default_conv_impl(), plan, interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -109,12 +109,24 @@ def forward(params: Dict[str, Any], x: jnp.ndarray,
 def compile_forward(params: Dict[str, Any], *, img: int, batch: int = 1,
                     policy: str = "auto",
                     cache: Optional[ScheduleCache] = None,
-                    jit: bool = True) -> CompiledNetwork:
+                    jit: bool = True,
+                    fuse_epilogues: bool = True,
+                    autotune: bool = False,
+                    tuning_path: Optional[str] = None,
+                    **compile_kw) -> CompiledNetwork:
     """Compile the whole VGG trunk+head into a static fold schedule.
 
     Returns the engine's ``CompiledNetwork``: call it as ``net(params, x)``;
     ``net.fold_reuse()`` reports the schedule-cache hit rate (the paper's
     fold-reuse metric) and ``net.describe()`` the per-layer schedule table.
+
+    In pallas mode with ``fuse_epilogues`` (default) each conv block —
+    conv, bias, ReLU and, before a pool stage, the 2x2 max-pool — runs as
+    one ``pallas_call``.  ``autotune=True`` selects each schedule from
+    measured timings instead of the analytical cost model, persisting the
+    winners to ``tuning_path`` (JSON) so tuning is pay-once.
     """
     return compile_network(params, VGG_LAYERS, (batch, 3, img, img),
-                           policy=policy, cache=cache, jit=jit)
+                           policy=policy, cache=cache, jit=jit,
+                           fuse_epilogues=fuse_epilogues, autotune=autotune,
+                           tuning_path=tuning_path, **compile_kw)

@@ -1,0 +1,386 @@
+"""PR-2 hot path: in-kernel WS depth reduction, fused epilogues, and the
+measured plan autotuner (DESIGN.md §5)."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (ScheduleCache, ScheduleKey, autotune_schedule,
+                               tuning_candidates)
+from repro.core.epilogue import Epilogue, apply_epilogue
+from repro.core.loopnest import ConvLoopNest
+from repro.core.mapping import plan_conv_blocks
+from repro.kernels.conv2d_ws import conv2d_folded
+from repro.kernels.ops import conv2d, conv2d_fused
+from repro.kernels.ref import conv2d_im2col
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _layer(cv: ConvLoopNest, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (cv.n, cv.c, cv.x, cv.y), dtype)
+    w = jax.random.normal(k2, (cv.nf, cv.c, cv.r, cv.s), dtype)
+    b = jax.random.normal(k3, (cv.nf,), dtype)
+    return x, w, b
+
+
+# --------------------------------------------------------------------------
+# in-kernel WS reduction vs the im2col oracle (incl. ResNet-style nests)
+# --------------------------------------------------------------------------
+
+RESNET_STYLE = [
+    # stride-2 3x3 (downsampling blocks)
+    ConvLoopNest(n=1, nf=16, c=8, r=3, s=3, x=15, y=15, stride=2, pad=1),
+    # 1x1 projection, stride 1 and 2
+    ConvLoopNest(n=2, nf=12, c=6, r=1, s=1, x=9, y=9, stride=1, pad=0),
+    ConvLoopNest(n=1, nf=24, c=12, r=1, s=1, x=14, y=14, stride=2, pad=0),
+]
+
+
+@pytest.mark.parametrize("cv", RESNET_STYLE, ids=str)
+def test_schedule_cache_resnet_style_matches_oracle(cv):
+    """Strided and R=S=1 nests through ScheduleCache -> kernel_for; the
+    in-kernel-reduction WS path and OS path vs the im2col oracle."""
+    cache = ScheduleCache()
+    sched = cache.schedule_for(cv)
+    assert sched.key.stride == cv.stride and sched.key.r == cv.r
+    x, w, _ = _layer(cv)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (cv.pad, cv.pad), (cv.pad, cv.pad)))
+    ref = np.asarray(conv2d_im2col(x, w, cv.stride, cv.pad))
+    kern = cache.kernel_for(sched, interpret=True)
+    np.testing.assert_allclose(np.asarray(kern(xp, w, stride=cv.stride)),
+                               ref, rtol=2e-4, atol=2e-4)
+    for dataflow in ("weight_stationary", "output_stationary"):
+        out = conv2d_folded(xp, w, stride=cv.stride, plan=sched.plan,
+                            dataflow=dataflow, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), ref,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_ws_multi_depth_fold_reduces_in_kernel():
+    """g_c > 1 (the regime where PR-1 staged partial sums in HBM): the
+    in-kernel WS reduction must match both the oracle and the legacy psum
+    formulation, from a single output-shaped buffer."""
+    cv = ConvLoopNest(n=1, nf=8, c=16, r=3, s=3, x=10, y=10, stride=1, pad=1)
+    plan = plan_conv_blocks(cv).clamped(cv.nf, cv.c, cv.p)
+    plan = dataclasses.replace(plan, c_block=4,
+                               grid=(plan.grid[0], 4, plan.grid[2]))
+    x, w, _ = _layer(cv)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    ref = np.asarray(conv2d_im2col(x, w, 1, 1))
+    out = conv2d_folded(xp, w, plan=plan, dataflow="weight_stationary",
+                        interpret=True)
+    assert out.shape == ref.shape            # output-shaped, not (g_c, ...)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+    legacy = conv2d_folded(xp, w, plan=plan,
+                           dataflow="weight_stationary_psum", interpret=True)
+    np.testing.assert_allclose(np.asarray(legacy), ref, rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# fused epilogues
+# --------------------------------------------------------------------------
+
+EPILOGUES = [Epilogue(bias=True), Epilogue(bias=True, relu=True),
+             Epilogue(relu=True),
+             Epilogue(bias=True, relu=True, pool="max2")]
+
+
+@pytest.mark.parametrize("dataflow",
+                         ["weight_stationary", "output_stationary"])
+@pytest.mark.parametrize("epi", EPILOGUES, ids=str)
+def test_fused_epilogue_matches_reference_chain(dataflow, epi):
+    cv = ConvLoopNest(n=2, nf=8, c=6, r=3, s=3, x=12, y=10, stride=1, pad=1)
+    x, w, b = _layer(cv)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    ref = apply_epilogue(conv2d_im2col(x, w, 1, 1), b, epi)
+    out = conv2d_folded(xp, w, plan=None, dataflow=dataflow, interpret=True,
+                        bias=b if epi.bias else None, epilogue=epi)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fused_pool_odd_extent_floor_semantics():
+    """Odd P/Q with a fused pool: floor semantics, like lax.reduce_window
+    VALID (the trailing row/column is dropped)."""
+    cv = ConvLoopNest(n=1, nf=8, c=4, r=3, s=3, x=9, y=7, stride=1, pad=1)
+    x, w, b = _layer(cv)
+    epi = Epilogue(bias=True, relu=True, pool="max2")
+    ref = apply_epilogue(conv2d_im2col(x, w, 1, 1), b, epi)
+    assert ref.shape[2:] == (cv.p // 2, cv.q // 2)
+    out = conv2d_fused(x, w, b, stride=1, pad=1, epilogue=epi,
+                       impl="fold_ws", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_conv2d_fused_gradients_match_reference():
+    """The fused op stays trainable: its VJP rematerializes the reference
+    chain."""
+    cv = ConvLoopNest(n=1, nf=4, c=3, r=3, s=3, x=8, y=8, stride=1, pad=1)
+    x, w, b = _layer(cv)
+    epi = Epilogue(bias=True, relu=True, pool="max2")
+
+    def loss_fused(x, w, b):
+        return jnp.sum(conv2d_fused(x, w, b, stride=1, pad=1, epilogue=epi,
+                                    impl="fold_ws", interpret=True) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(apply_epilogue(conv2d_im2col(x, w, 1, 1), b, epi) ** 2)
+
+    g = jax.grad(loss_fused, argnums=(0, 1, 2))(x, w, b)
+    g_r = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(g, g_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_kernel_for_memoizes_per_epilogue():
+    cache = ScheduleCache()
+    cv = ConvLoopNest(n=1, nf=8, c=4, r=3, s=3, x=16, y=16, stride=1, pad=1)
+    sched = cache.schedule_for(cv)
+    epi = Epilogue(bias=True, relu=True)
+    k1 = cache.kernel_for(sched, interpret=True, epilogue=epi)
+    k2 = cache.kernel_for(sched, interpret=True, epilogue=epi)
+    k3 = cache.kernel_for(sched, interpret=True)
+    assert k1 is k2 and k1 is not k3
+
+
+def test_aligned_layer_skips_padding(monkeypatch):
+    """Blocks that divide the dims evenly must not copy via jnp.pad."""
+    import repro.kernels.conv2d_ws as mod
+    calls = []
+    real_pad = jnp.pad
+
+    def counting_pad(*a, **k):
+        calls.append(a[1] if len(a) > 1 else k.get("pad_width"))
+        return real_pad(*a, **k)
+
+    monkeypatch.setattr(mod.jnp, "pad", counting_pad)
+    # nf=8 (= nf_block), c=16 (= c_block), 18 padded rows = rows_needed
+    x = jax.random.normal(KEY, (1, 16, 18, 18), jnp.float32)
+    w = jax.random.normal(KEY, (8, 16, 3, 3), jnp.float32)
+    out = conv2d_folded(x, w, stride=1, interpret=True)
+    assert out.shape == (1, 8, 16, 16)
+    assert calls == []                       # aligned: no pad, no copy
+    # unaligned control: a plan whose c/p blocks don't divide the dims
+    cv = ConvLoopNest(n=1, nf=8, c=16, r=3, s=3, x=18, y=18, stride=1, pad=0)
+    base = plan_conv_blocks(cv).clamped(cv.nf, cv.c, cv.p)
+    ragged = dataclasses.replace(base, c_block=6, p_block=5,
+                                 grid=(base.grid[0], 3, 4))
+    conv2d_folded(x, w, stride=1, plan=ragged, interpret=True)
+    assert len(calls) >= 1
+
+
+# --------------------------------------------------------------------------
+# measured autotuner
+# --------------------------------------------------------------------------
+
+def _fake_timer(ranking):
+    """Deterministic timer: ms drawn from ``ranking[(p_block, dataflow)]``,
+    default 100."""
+    def timer(plan, dataflow):
+        return ranking.get((plan.p_block, dataflow), 100.0)
+    return timer
+
+
+def test_autotune_never_ranks_measured_slower_above_faster():
+    cv = ConvLoopNest(n=1, nf=16, c=8, r=3, s=3, x=16, y=16, stride=1, pad=1)
+    cands = tuning_candidates(cv)
+    assert len(cands) >= 4                   # plan variants x dataflows
+    # make an arbitrary non-default candidate the measured winner
+    want_plan = cands[-1][1]
+    want_df = "output_stationary"
+    ranking = {(want_plan.p_block, want_df): 1.0}
+    sched = autotune_schedule(cv, timer=_fake_timer(ranking))
+    assert sched.dataflow == want_df
+    assert sched.plan.p_block == want_plan.p_block
+    assert sched.measured_ms == 1.0
+    ms = [m for _, m in sched.timings]
+    assert ms == sorted(ms)                  # fastest-first, always
+    # flip the ranking: the winner must flip with it
+    other = cands[0]
+    ranking2 = {(other[1].p_block, "weight_stationary"): 0.5,
+                (want_plan.p_block, want_df): 2.0}
+    sched2 = autotune_schedule(cv, timer=_fake_timer(ranking2))
+    assert sched2.dataflow == "weight_stationary"
+    assert sched2.measured_ms == 0.5
+
+
+def test_autotune_skips_failing_candidates():
+    """One uncompilable candidate must not abort the race; all-fail must
+    raise with context."""
+    cv = ConvLoopNest(n=1, nf=16, c=8, r=3, s=3, x=16, y=16, stride=1, pad=1)
+    base_p = tuning_candidates(cv)[0][1].p_block
+
+    def flaky(plan, dataflow):
+        if plan.p_block == base_p:            # base plan "fails to compile"
+            raise ValueError("mosaic says no")
+        return float(plan.p_block)
+
+    sched = autotune_schedule(cv, timer=flaky)
+    assert sched.plan.p_block != base_p       # ranked from the survivors
+    with pytest.raises(RuntimeError, match="every candidate failed"):
+        autotune_schedule(cv, timer=lambda p, d: (_ for _ in ()).throw(
+            ValueError("boom")))
+
+
+def test_autotune_cache_pay_once_and_json_round_trip(tmp_path):
+    cv = ConvLoopNest(n=1, nf=16, c=8, r=3, s=3, x=16, y=16, stride=1, pad=1)
+    calls = {"n": 0}
+
+    def timer(plan, dataflow):
+        calls["n"] += 1
+        return 3.0 if dataflow == "weight_stationary" else 7.0
+
+    cache = ScheduleCache()
+    s1 = cache.autotune_for(cv, timer=timer)
+    measured_calls = calls["n"]
+    assert measured_calls > 0 and s1.source == "measured"
+    assert s1.dataflow == "weight_stationary"
+    # same key again: no re-measurement (pay-once)
+    s2 = cache.autotune_for(cv, timer=timer)
+    assert s2 is s1 and calls["n"] == measured_calls
+    # smaller spatial extent shares the tuned schedule
+    s3 = cache.autotune_for(dataclasses.replace(cv, x=12, y=12), timer=timer)
+    assert s3 is s1 and calls["n"] == measured_calls
+
+    path = os.path.join(tmp_path, "tuning.json")
+    assert cache.save_tuning(path) == 1
+    payload = json.load(open(path))
+    assert payload["entries"][0]["dataflow"] == "weight_stationary"
+
+    fresh = ScheduleCache()
+    assert fresh.load_tuning(path) == 1
+
+    def bomb(plan, dataflow):
+        raise AssertionError("loaded tuning must not re-measure")
+
+    s4 = fresh.autotune_for(cv, timer=bomb)
+    assert s4.source == "loaded"
+    assert s4.dataflow == s1.dataflow
+    assert s4.plan.p_block == s1.plan.p_block
+    assert s4.measured_ms == pytest.approx(s1.measured_ms)
+    # schedule_for also returns the loaded winner (hit, no re-plan)
+    assert fresh.schedule_for(cv) is s4
+
+
+def test_compile_network_autotune_matches_oracle_and_persists(tmp_path):
+    from repro.models import vgg
+    params = vgg.init_params(jax.random.PRNGKey(0), width_mult=0.0625,
+                             img=32, classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32))
+    ref = np.asarray(vgg.forward(params, x, impl="im2col"))
+    path = os.path.join(tmp_path, "vgg_tuning.json")
+
+    def timer(plan, dataflow):                # deterministic fake
+        return plan.p_block + (0.5 if dataflow == "weight_stationary" else 0)
+
+    net = vgg.compile_forward(params, img=32, batch=2, policy="pallas",
+                              autotune=True, tuning_path=path,
+                              cache=ScheduleCache(), autotune_timer=timer)
+    assert net.autotuned and net.fused
+    np.testing.assert_allclose(np.asarray(net(params, x)), ref,
+                               rtol=1e-3, atol=1e-3)
+    assert os.path.exists(path)
+    n_entries = len(json.load(open(path))["entries"])
+    assert n_entries == net.distinct_schedules
+
+    def bomb(plan, dataflow):
+        raise AssertionError("tuning cache must make this pay-once")
+
+    net2 = vgg.compile_forward(params, img=32, batch=2, policy="pallas",
+                               autotune=True, tuning_path=path,
+                               cache=ScheduleCache(), autotune_timer=bomb)
+    np.testing.assert_allclose(np.asarray(net2(params, x)), ref,
+                               rtol=1e-3, atol=1e-3)
+    assert net2.build_stats.hits == len(net2.layer_schedules)
+    assert all(s.source == "loaded" for _, s in net2.layer_schedules)
+
+
+def test_autotune_real_timer_under_auto_policy_off_tpu():
+    """policy="auto" resolves to reference mode off-TPU, but autotuning
+    must still measure the fold kernels under the backend's own interpret
+    policy (regression: interpret=False leaked into measure_schedule_ms
+    and asked for real Pallas lowering on CPU)."""
+    from repro.core.engine import compile_network
+    from repro.models.common import DTypePolicy, TreeMaker
+    tm = TreeMaker("init", key=jax.random.PRNGKey(0),
+                   dtype_policy=DTypePolicy(param=jnp.float32,
+                                            compute=jnp.float32))
+    params = {"c1": {"w": tm.param((4, 3, 3, 3), (None, None, None, None)),
+                     "b": tm.param((4,), (None,), init="zeros")}}
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 8, 8))
+    net = compile_network(params, (("c1", 3, 4),), (1, 3, 8, 8),
+                          policy="auto", autotune=True)   # real timer
+    ref = conv2d(x, params["c1"]["w"], stride=1, pad=1, impl="im2col")
+    ref = jax.nn.relu(ref + params["c1"]["b"][None, :, None, None])
+    np.testing.assert_allclose(np.asarray(net(params, x)), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+    assert all(s.source == "measured" for _, s in net.layer_schedules)
+
+
+def test_ws_falls_back_when_accumulator_exceeds_vmem(monkeypatch):
+    """A WS request whose full-height accumulator overflows the VMEM bound
+    must degrade gracefully (psum staging, or OS when an epilogue needs an
+    in-kernel flush) instead of allocating an uncompilable scratch."""
+    import repro.kernels.conv2d_ws as mod
+    monkeypatch.setattr(mod, "WS_ACC_BYTES_LIMIT", 64)   # force the spill
+    cv = ConvLoopNest(n=1, nf=8, c=6, r=3, s=3, x=10, y=10, stride=1, pad=1)
+    x, w, b = _layer(cv)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    ref = conv2d_im2col(x, w, 1, 1)
+    out = conv2d_folded(xp, w, dataflow="weight_stationary", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    epi = Epilogue(bias=True, relu=True)
+    out_f = conv2d_folded(xp, w, dataflow="weight_stationary",
+                          interpret=True, bias=b, epilogue=epi)
+    np.testing.assert_allclose(np.asarray(out_f),
+                               np.asarray(apply_epilogue(ref, b, epi)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_load_tuning_rejects_foreign_backend(tmp_path):
+    cv = ConvLoopNest(n=1, nf=8, c=4, r=3, s=3, x=8, y=8, stride=1, pad=1)
+    cache = ScheduleCache()
+    cache.autotune_for(cv, timer=lambda plan, df: 1.0)
+    path = os.path.join(tmp_path, "tuning.json")
+    cache.save_tuning(path)
+    payload = json.load(open(path))
+    payload["backend"] = "not-this-backend"
+    json.dump(payload, open(path, "w"))
+    fresh = ScheduleCache()
+    with pytest.warns(UserWarning, match="measured on backend"):
+        assert fresh.load_tuning(path) == 0
+    assert len(fresh) == 0                   # nothing installed
+
+
+# --------------------------------------------------------------------------
+# fused whole-network compilation
+# --------------------------------------------------------------------------
+
+def test_compiled_fused_network_single_pallas_call_per_conv():
+    """The fused pallas net's jaxpr contains exactly 13 pallas_calls (one
+    per conv layer) and no separate reduce_window/max-pool for the 5 fused
+    pool stages."""
+    from repro.models import vgg
+    params = vgg.init_params(jax.random.PRNGKey(0), width_mult=0.0625,
+                             img=32, classes=10)
+    x = jnp.zeros((1, 3, 32, 32))
+    net = vgg.compile_forward(params, img=32, batch=1, policy="pallas",
+                              jit=False)
+    jaxpr = str(jax.make_jaxpr(net.apply)(params, x))
+    assert jaxpr.count("pallas_call") == 13
+    assert "reduce_window_max" not in jaxpr   # all 5 pools fused
+    unfused = vgg.compile_forward(params, img=32, batch=1, policy="pallas",
+                                  fuse_epilogues=False, jit=False)
+    jaxpr_un = str(jax.make_jaxpr(unfused.apply)(params, x))
+    assert jaxpr_un.count("pallas_call") == 13
+    assert "reduce_window" in jaxpr_un        # pools separate when unfused

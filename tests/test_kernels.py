@@ -34,7 +34,8 @@ CASES = [
 
 
 @pytest.mark.parametrize("case", CASES)
-@pytest.mark.parametrize("impl", ["fold_ws", "fold_os", "im2col", "direct"])
+@pytest.mark.parametrize("impl", ["fold_ws", "fold_os", "fold_ws_psum",
+                                  "im2col", "direct"])
 def test_conv2d_matches_xla(case, impl):
     n, c, x_, y_, nf, r, s, stride, pad = case
     k1, k2 = jax.random.split(KEY)
