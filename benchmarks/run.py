@@ -7,7 +7,11 @@ report from the dry-run artifacts, plus a machine-readable perf snapshot.
 Both modes finish by writing ``BENCH_vgg.json`` (per-image latency of the
 auto/fused/unfused engine paths, schedule-cache hit rate, and the
 bytes-moved model for full-size VGG-16) so CI can track the perf
-trajectory per PR; ``--micro`` runs just that interpreter-mode micro-bench.
+trajectory per PR.  The full suite also emits the continuous-batching
+serving metrics (measured KIPS, latency percentiles, slot occupancy —
+``serve/vision.py``); ``--micro`` skips that section because CI's
+dedicated serving smoke job (``launch/serve.py --vision``) merges it in
+with a larger request stream.
 """
 import json
 import sys
@@ -16,15 +20,32 @@ import time
 BENCH_JSON = "BENCH_vgg.json"
 
 
-def emit_bench_json(path: str = BENCH_JSON) -> dict:
-    from benchmarks import fig9_vgg
-    summary = fig9_vgg.bench_summary()
+def emit_bench_json(path: str = BENCH_JSON, serving: bool = True) -> dict:
+    summary = micro_summary(serving=serving)
     with open(path, "w") as f:
         json.dump(summary, f, indent=2)
     lat = summary["latency"]
     print(f"# wrote {path}: fused {lat['pallas_fused_per_img_s']*1e3:.1f}"
           f"ms/img (speedup {lat['fused_speedup']}x vs unfused), "
           f"hit_rate={summary['fold_reuse']['hit_rate']}")
+    if serving:
+        srv = summary["serving"]
+        print(f"# serving: {srv['kips']} KIPS, "
+              f"p95={srv['latency']['p95_s']}s, "
+              f"occupancy={srv['slot_occupancy']}")
+    return summary
+
+
+def micro_summary(serving: bool = True) -> dict:
+    """The BENCH_vgg.json payload.  ``serving=False`` skips the serving
+    drain — CI's ``--micro`` step does, because the dedicated serving
+    smoke job (``launch/serve.py --vision``) produces that section with a
+    larger request stream right after and would overwrite it anyway."""
+    from benchmarks import fig9_vgg
+    summary = fig9_vgg.bench_summary()
+    if serving:
+        from repro.serve.vision import serving_summary
+        summary["serving"] = serving_summary(requests=16)
     return summary
 
 
@@ -53,10 +74,11 @@ def main() -> None:
 
 
 def micro() -> None:
-    """The CI entry point: interpreter-mode micro-bench + BENCH_vgg.json."""
+    """The CI entry point: interpreter-mode micro-bench + BENCH_vgg.json
+    (sans the serving section — CI's serving smoke step fills that in)."""
     t0 = time.perf_counter()
     print("===== micro-bench (interpreter mode) =====")
-    emit_bench_json()
+    emit_bench_json(serving=False)
     print(f"# [micro: {time.perf_counter()-t0:.2f}s]")
 
 

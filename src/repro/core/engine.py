@@ -71,6 +71,7 @@ __all__ = [
     "vgg_head",
     "CompiledNetwork",
     "compile_network",
+    "BucketCompiler",
 ]
 
 
@@ -249,30 +250,38 @@ def tuning_candidates(cv: ConvLoopNest,
                       vmem_limit: int = 64 * 1024 * 1024
                       ) -> List[Tuple[str, ConvBlockPlan, str]]:
     """The candidate set ``autotune_schedule`` races: the analytical plan
-    plus nearby block-shape variants, crossed with both dataflows.
+    plus nearby block-shape variants — every blocked axis of the fold
+    geometry (P, C, and since PR 3 the NF filter-fold axis too) — crossed
+    with both dataflows.
 
-    Kept deliberately small (<= 8 timed runs per geometry): tuning is
-    pay-once per ``ScheduleKey`` and persisted as JSON, but each timing is
-    a real on-device run.
+    Kept deliberately small (<= 12 timed runs per geometry, usually fewer
+    after dedup): tuning is pay-once per ``ScheduleKey`` and persisted as
+    JSON, but each timing is a real on-device run.
     """
     base = (base_plan or plan_conv_blocks(cv, vmem_limit=vmem_limit)
             ).clamped(cv.nf, cv.c, cv.p)
 
-    def with_blocks(c_b: int, p_b: int) -> ConvBlockPlan:
+    def with_blocks(nf_b: int, c_b: int, p_b: int) -> ConvBlockPlan:
+        if cv.nf >= 8:                      # keep the MXU-lane alignment
+            nf_b = -(-nf_b // 8) * 8
+        nf_b = max(1, min(nf_b, -(-cv.nf // 8) * 8 if cv.nf >= 8 else cv.nf))
         c_b = max(1, min(c_b, cv.c))
         p_b = max(1, min(p_b, cv.p))
-        grid = (math.ceil(cv.nf / base.nf_block), math.ceil(cv.c / c_b),
+        grid = (math.ceil(cv.nf / nf_b), math.ceil(cv.c / c_b),
                 math.ceil(cv.p / p_b))
         return dataclasses.replace(
-            base, c_block=c_b, p_block=p_b, grid=grid,
-            vmem_bytes=conv_working_set(cv, base.nf_block, c_b, p_b))
+            base, nf_block=nf_b, c_block=c_b, p_block=p_b, grid=grid,
+            vmem_bytes=conv_working_set(cv, nf_b, c_b, p_b))
 
+    nf_b, c_b, p_b = base.nf_block, base.c_block, base.p_block
     plans: Dict[Tuple[int, int, int], Tuple[str, ConvBlockPlan]] = {}
     for label, plan in (
             ("base", base),
-            ("p_half", with_blocks(base.c_block, base.p_block // 2)),
-            ("p_double", with_blocks(base.c_block, base.p_block * 2)),
-            ("c_half", with_blocks(base.c_block // 2, base.p_block)),
+            ("p_half", with_blocks(nf_b, c_b, p_b // 2)),
+            ("p_double", with_blocks(nf_b, c_b, p_b * 2)),
+            ("c_half", with_blocks(nf_b, c_b // 2, p_b)),
+            ("nf_half", with_blocks(nf_b // 2, c_b, p_b)),
+            ("nf_double", with_blocks(nf_b * 2, c_b, p_b)),
     ):
         plans.setdefault((plan.nf_block, plan.c_block, plan.p_block),
                          (label, plan))
@@ -542,11 +551,27 @@ class ScheduleCache:
         Timings only transfer within a backend: a cache recorded on a
         different backend is ignored (returns 0, with a warning) so stale
         CPU-interpret rankings never reach a TPU deployment — the caller
-        simply re-measures and overwrites."""
+        simply re-measures and overwrites.
+
+        A missing, unreadable, or corrupt cache file is never fatal: the
+        loader warns and returns 0 (or however many entries parsed before
+        the corruption) and the engine falls back to the heuristic
+        schedules / fresh measurements — a deployment must not fail to
+        start because a tuning artifact rotted."""
         import warnings
-        with open(path) as f:
-            payload = json.load(f)
-        recorded = payload.get("backend")
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            entries = payload["entries"]
+            if not isinstance(entries, list):
+                raise TypeError(f"entries is {type(entries).__name__}, "
+                                "not a list")
+            recorded = payload.get("backend")
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            warnings.warn(f"tuning cache {path!r} is missing or corrupt "
+                          f"({type(e).__name__}: {e}); falling back to "
+                          "heuristic schedules")
+            return 0
         current = jax.default_backend()
         if recorded is not None and recorded != current:
             warnings.warn(f"tuning cache {path!r} was measured on backend "
@@ -554,22 +579,29 @@ class ScheduleCache:
                           "ignoring it (schedules will be re-measured)")
             return 0
         n = 0
-        for e in payload["entries"]:
-            key = ScheduleKey(**e["key"])
-            nest = ConvLoopNest(**e["nest"])
-            pd = e["plan"]
-            plan = ConvBlockPlan(nf_block=int(pd["nf_block"]),
-                                 c_block=int(pd["c_block"]),
-                                 p_block=int(pd["p_block"]),
-                                 grid=tuple(int(g) for g in pd["grid"]),
-                                 vmem_bytes=int(pd["vmem_bytes"]))
+        for e in entries:
+            try:
+                key = ScheduleKey(**e["key"])
+                nest = ConvLoopNest(**e["nest"])
+                pd = e["plan"]
+                plan = ConvBlockPlan(nf_block=int(pd["nf_block"]),
+                                     c_block=int(pd["c_block"]),
+                                     p_block=int(pd["p_block"]),
+                                     grid=tuple(int(g) for g in pd["grid"]),
+                                     vmem_bytes=int(pd["vmem_bytes"]))
+                dataflow = e["dataflow"]
+                measured_ms = e.get("measured_ms")
+                timings = tuple((lbl, float(ms))
+                                for lbl, ms in e.get("timings", ()))
+            except (KeyError, TypeError, ValueError) as err:
+                warnings.warn(f"tuning cache {path!r}: skipping corrupt "
+                              f"entry ({type(err).__name__}: {err})")
+                continue
             costs = dataflow_costs(nest, plan, self.cfg)
             self._entries[key] = ConvSchedule(
-                key=key, nest=nest, plan=plan, dataflow=e["dataflow"],
+                key=key, nest=nest, plan=plan, dataflow=dataflow,
                 costs=tuple(sorted(costs.items())), source="loaded",
-                measured_ms=e.get("measured_ms"),
-                timings=tuple((lbl, float(ms))
-                              for lbl, ms in e.get("timings", ())))
+                measured_ms=measured_ms, timings=timings)
             self._kernels = {k: v for k, v in self._kernels.items()
                              if k[0] != key}
             n += 1
@@ -813,3 +845,82 @@ def compile_network(params: Dict[str, Any],
                            build_stats=build_stats, cache=cache,
                            mode=mode, interpret=interpret,
                            fused=fused, autotuned=autotune)
+
+
+# --------------------------------------------------------------------------
+# Per-bucket compiled-forward cache (the serving engine's compile surface)
+# --------------------------------------------------------------------------
+
+class BucketCompiler:
+    """Memoized ``compile_network`` per batch width, one shared
+    ``ScheduleCache``.
+
+    Continuous-batching serving pads request batches to a small set of
+    *bucket* widths so each width is one stable jitted forward.  Because
+    ``ScheduleKey`` deliberately excludes the batch axis (the batch only
+    changes how many image folds stream through a schedule), the first
+    bucket's compile populates every filter-fold schedule — measuring them
+    when ``autotune`` is set — and every later bucket compiles with 100%
+    schedule-cache hits: planning and tuning are pay-once across buckets,
+    only the XLA trace is per-bucket.  With ``tuning_path`` the measured
+    winners round-trip through one JSON shared by all buckets (and by
+    later sessions).
+    """
+
+    def __init__(self, params: Dict[str, Any], layers: Sequence,
+                 img: int, *, chan: int = 3, policy: str = "auto",
+                 cache: Optional[ScheduleCache] = None,
+                 head: Optional[Callable] = None, jit: bool = True,
+                 fuse_epilogues: bool = True, autotune: bool = False,
+                 tuning_path: Optional[str] = None,
+                 autotune_reps: int = 3,
+                 autotune_timer: Optional[Callable] = None):
+        self.params = params
+        self.layers = tuple(layers)
+        self.img = int(img)
+        self.chan = int(chan)
+        self.policy = policy
+        self.cache = cache if cache is not None else ScheduleCache()
+        self.head = head
+        self.jit = jit
+        self.fuse_epilogues = fuse_epilogues
+        self.autotune = autotune
+        self.tuning_path = tuning_path
+        self.autotune_reps = autotune_reps
+        self.autotune_timer = autotune_timer
+        self._nets: Dict[int, CompiledNetwork] = {}
+
+    @property
+    def buckets(self) -> List[int]:
+        """Bucket widths compiled so far, ascending."""
+        return sorted(self._nets)
+
+    def __contains__(self, batch: int) -> bool:
+        return int(batch) in self._nets
+
+    def network_for(self, batch: int) -> CompiledNetwork:
+        """The compiled forward for one bucket width (compiling on first
+        use; schedules come from the shared cache)."""
+        batch = int(batch)
+        if batch < 1:
+            raise ValueError(f"bucket width must be >= 1, got {batch}")
+        net = self._nets.get(batch)
+        if net is None:
+            net = compile_network(
+                self.params, self.layers,
+                (batch, self.chan, self.img, self.img),
+                policy=self.policy, cache=self.cache, head=self.head,
+                jit=self.jit, fuse_epilogues=self.fuse_epilogues,
+                autotune=self.autotune, tuning_path=self.tuning_path,
+                autotune_reps=self.autotune_reps,
+                autotune_timer=self.autotune_timer)
+            self._nets[batch] = net
+        return net
+
+    def stats(self) -> dict:
+        """Aggregate compile-surface stats: buckets built + the shared
+        schedule cache's fold-reuse counters."""
+        d = {"buckets": self.buckets,
+             "distinct_schedules": self.cache.distinct}
+        d.update(self.cache.stats.as_dict())
+        return d

@@ -23,33 +23,43 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["Epilogue", "apply_epilogue", "epilogue_out_hw", "FUSED_RELU",
-           "FUSED_RELU_POOL"]
+           "FUSED_RELU_POOL", "FUSED_RESIDUAL_RELU"]
 
 
 @dataclasses.dataclass(frozen=True)
 class Epilogue:
     """What the kernel does to a finished output fold at flush time.
 
-    bias  — add a per-filter bias (the caller supplies the vector).
-    relu  — clamp at zero.
-    pool  — ``"max2"`` fuses a 2x2/2 max-pool (windows never straddle fold
-            boundaries: the kernel rounds the P block to even).  ``None``
-            leaves the spatial dims untouched.
+    bias     — add a per-filter bias (the caller supplies the vector).
+    residual — add a skip-connection tensor shaped like the conv output
+               (ResNet blocks: ``relu(conv(x) + b + shortcut)``; the
+               caller supplies the tensor).  Applied after bias, before
+               ReLU.  Incompatible with ``pool`` — ResNet adds the
+               shortcut to the un-pooled output, and fusing both would
+               make the residual's fold geometry ambiguous.
+    relu     — clamp at zero.
+    pool     — ``"max2"`` fuses a 2x2/2 max-pool (windows never straddle
+               fold boundaries: the kernel rounds the P block to even).
+               ``None`` leaves the spatial dims untouched.
     """
     bias: bool = False
     relu: bool = False
     pool: Optional[str] = None
+    residual: bool = False
 
     def __post_init__(self):
         if self.pool not in (None, "max2"):
             raise ValueError(f"unknown pool {self.pool!r} (want None|'max2')")
+        if self.residual and self.pool:
+            raise ValueError("Epilogue(residual=True) cannot fuse a pool: "
+                             "the shortcut adds to the un-pooled output")
 
     @property
     def identity(self) -> bool:
-        return not (self.bias or self.relu or self.pool)
+        return not (self.bias or self.relu or self.pool or self.residual)
 
     def __str__(self) -> str:
-        parts = [n for n in ("bias", "relu") if getattr(self, n)]
+        parts = [n for n in ("bias", "residual", "relu") if getattr(self, n)]
         if self.pool:
             parts.append(self.pool)
         return "+".join(parts) or "id"
@@ -57,6 +67,7 @@ class Epilogue:
 
 FUSED_RELU = Epilogue(bias=True, relu=True)
 FUSED_RELU_POOL = Epilogue(bias=True, relu=True, pool="max2")
+FUSED_RESIDUAL_RELU = Epilogue(bias=True, relu=True, residual=True)
 
 
 def epilogue_out_hw(epi: Optional["Epilogue"], p: int, q: int
@@ -76,7 +87,8 @@ def maxpool2x2(y: jnp.ndarray) -> jnp.ndarray:
 
 
 def apply_epilogue(y: jnp.ndarray, b: Optional[jnp.ndarray],
-                   epi: Optional["Epilogue"]) -> jnp.ndarray:
+                   epi: Optional["Epilogue"],
+                   residual: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Reference epilogue on an NCHW conv output (oracle for the kernels)."""
     if epi is None or epi.identity:
         return y
@@ -84,6 +96,11 @@ def apply_epilogue(y: jnp.ndarray, b: Optional[jnp.ndarray],
         if b is None:
             raise ValueError("Epilogue(bias=True) needs a bias vector")
         y = y + b[None, :, None, None].astype(y.dtype)
+    if epi.residual:
+        if residual is None:
+            raise ValueError("Epilogue(residual=True) needs a residual "
+                             "tensor")
+        y = y + residual.astype(y.dtype)
     if epi.relu:
         y = jax.nn.relu(y)
     if epi.pool == "max2":

@@ -40,6 +40,7 @@ __all__ = [
     "ConvBlockPlan",
     "conv_working_set",
     "plan_conv_blocks",
+    "serving_conv_plan",
     "WS_ACC_BYTES_LIMIT",
 ]
 
@@ -212,6 +213,30 @@ def weight_stationary_conv_plan(conv: ConvLoopNest) -> MappingPlan:
             TemporalMap("N", 1),            # image folds
             TemporalMap("P", 1),
             TemporalMap("Q", 1),            # shift cycles
+        ),
+    )
+    plan.validate()
+    return plan
+
+
+def serving_conv_plan(batch: int, nf: int, *, data_axis: str = "data",
+                      model_axis: str = "model") -> MappingPlan:
+    """The Spatial-Map directive set for batched conv serving: the batch
+    (image-fold streaming) axis distributes across the ``data`` mesh axis
+    and the N_F (filter-fold stationary) axis across ``model`` — the same
+    two bindings Fig 6 assigns on-fabric, lifted one level to the mesh.
+
+    ``partition_spec`` on this plan is how the serving engine emits its
+    shardings: activations are ``("N", None, None, None)`` (NCHW), conv
+    weights ``("N_F", None, None, None)`` (OIHW), biases ``("N_F",)`` —
+    see ``distributed/sharding.py:vision_shardings``.
+    """
+    plan = MappingPlan(
+        name=f"serve-conv[n={batch},nf={nf}]",
+        dims={"N": batch, "N_F": nf},
+        directives=(
+            SpatialMap("N", data_axis),      # image folds -> DP
+            SpatialMap("N_F", model_axis),   # filter folds -> TP
         ),
     )
     plan.validate()

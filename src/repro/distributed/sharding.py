@@ -26,7 +26,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.models.common import Axes
 
 __all__ = ["ShardingRules", "make_rules", "spec_for", "tree_shardings",
-           "set_context", "clear_context", "constrain", "zero1_shardings"]
+           "set_context", "clear_context", "constrain", "zero1_shardings",
+           "vision_shardings", "vision_batch_sharding"]
 
 MeshAxes = Optional[Tuple[str, ...]]
 
@@ -88,6 +89,50 @@ def tree_shardings(axes_tree, rules: ShardingRules, mesh: Mesh):
     return jax.tree.map(
         lambda a: NamedSharding(mesh, spec_for(a, rules)),
         axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Vision serving: the conv-trunk binding of the paper's Spatial Maps
+# ---------------------------------------------------------------------------
+
+def vision_batch_sharding(mesh: Mesh, plan) -> NamedSharding:
+    """NamedSharding for an NCHW activation batch under a serving
+    ``MappingPlan`` (``core/mapping.py:serving_conv_plan``): the batch —
+    the image-fold streaming axis — shards across the plan's data axis."""
+    return NamedSharding(mesh, plan.partition_spec(("N", None, None, None)))
+
+
+def vision_shardings(params, mesh: Mesh, plan):
+    """NamedShardings for a conv-trunk param tree under a serving plan.
+
+    Conv layers (4-D ``w`` OIHW + its ``b``) shard on the N_F filter-fold
+    axis — the stationary axis: each model-parallel device holds its slice
+    of every filter fold and the weights never move at serving time.  A
+    layer whose filter count does not divide the model-axis size
+    replicates (same fallback discipline as ``make_rules``), as does
+    everything that is not a conv layer (the fc head).
+    """
+    by_dim = {d.dim: d.axis for d in plan.spatial()}
+    model_axis = by_dim.get("N_F")
+    model = mesh.shape.get(model_axis, 1) if model_axis else 1
+    w_spec = plan.partition_spec(("N_F", None, None, None))
+    b_spec = plan.partition_spec(("N_F",))
+    replicate = NamedSharding(mesh, PartitionSpec())
+
+    def is_conv(leaf) -> bool:
+        return (isinstance(leaf, dict) and "w" in leaf
+                and getattr(leaf["w"], "ndim", 0) == 4
+                and leaf["w"].shape[0] % model == 0)
+
+    out = {}
+    for name, leaf in params.items():
+        if is_conv(leaf):
+            out[name] = {k: NamedSharding(mesh, w_spec) if k == "w"
+                         else NamedSharding(mesh, b_spec)
+                         for k in leaf}
+        else:
+            out[name] = jax.tree.map(lambda _: replicate, leaf)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -23,10 +23,11 @@ ever materialized in HBM):
   full-height) accumulator; ``core/engine.py:dataflow_costs`` prices the
   trade and ``autotune_schedule`` can measure it.
 
-Both kernels flush an optional fused **epilogue** (bias add, ReLU, 2x2/2
-max-pool — ``core/epilogue.py``) at the moment the last depth fold
-finishes, so a conv→bias→ReLU(→pool) chain is one ``pallas_call`` and the
-pre-activation tensor never leaves VMEM.
+Both kernels flush an optional fused **epilogue** (bias add, ResNet-style
+residual shortcut add, ReLU, 2x2/2 max-pool — ``core/epilogue.py``) at the
+moment the last depth fold finishes, so a conv→bias(→+shortcut)→ReLU(→pool)
+chain is one ``pallas_call`` and the pre-activation tensor never leaves
+VMEM.
 
 ``weight_stationary_psum`` keeps the original PR-1 formulation — each
 depth fold emits a partial-sum fold to HBM, reduced afterwards with XLA —
@@ -86,10 +87,12 @@ def _fold_partial(xv, w_ref, i_p, *, r: int, s: int, stride: int,
     return acc
 
 
-def _flush_value(v, b_ref, epi: Epilogue):
+def _flush_value(v, b_ref, epi: Epilogue, res=None):
     """Apply the fused epilogue to a finished fp32 fold (nf_b, p_b, q)."""
     if epi.bias:
         v = v + b_ref[:, 0].astype(jnp.float32)[:, None, None]
+    if epi.residual:
+        v = v + res.astype(jnp.float32)      # ResNet shortcut, pre-ReLU
     if epi.relu:
         v = jnp.maximum(v, 0.0)
     if epi.pool == "max2":
@@ -97,7 +100,7 @@ def _flush_value(v, b_ref, epi: Epilogue):
     return v
 
 
-def _ws_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, r: int, s: int,
+def _ws_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
                stride: int, p_block: int, q: int, n_c: int, epi: Epilogue):
     """Weight-stationary with in-kernel depth reduction.
 
@@ -105,8 +108,12 @@ def _ws_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, r: int, s: int,
     height for this (N, nf-fold) — the software form of the paper's
     reserved-column partial sums staged on-fabric.  The output block is
     revisited contiguously across the whole (c, p) sweep and flushed (with
-    the epilogue) as each P slice finishes its last depth fold.
+    the epilogue) as each P slice finishes its last depth fold.  With
+    ``epi.residual`` an extra shortcut input rides along (full-height,
+    resident like the output) and is added at flush time.
     """
+    res_ref, (out_ref, acc_ref) = (refs[0] if epi.residual else None,
+                                   refs[-2:])
     i_c = pl.program_id(2)
     i_p = pl.program_id(3)
     part = _fold_partial(x_ref[0], w_ref, i_p, r=r, s=s, stride=stride,
@@ -123,7 +130,10 @@ def _ws_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, r: int, s: int,
 
     @pl.when(i_c == n_c - 1)
     def _flush():
-        v = _flush_value(acc_ref[:, pl.ds(row0, p_block), :], b_ref, epi)
+        res = (res_ref[0, :, pl.ds(row0, p_block), :]
+               if epi.residual else None)
+        v = _flush_value(acc_ref[:, pl.ds(row0, p_block), :], b_ref, epi,
+                         res)
         if epi.pool == "max2":
             out_ref[0, :, pl.ds(i_p * (p_block // 2), p_block // 2), :] = (
                 v.astype(out_ref.dtype))
@@ -131,9 +141,11 @@ def _ws_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, r: int, s: int,
             out_ref[0, :, pl.ds(row0, p_block), :] = v.astype(out_ref.dtype)
 
 
-def _os_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, r: int, s: int,
+def _os_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
                stride: int, p_block: int, q: int, n_c: int, epi: Epilogue):
     """Output-stationary variant. Grid: (N, nf, p, c); c fastest."""
+    res_ref, (out_ref, acc_ref) = (refs[0] if epi.residual else None,
+                                   refs[-2:])
     i_p = pl.program_id(2)
     i_c = pl.program_id(3)
     part = _fold_partial(x_ref[0], w_ref, i_p, r=r, s=s, stride=stride,
@@ -149,8 +161,9 @@ def _os_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, *, r: int, s: int,
 
     @pl.when(i_c == n_c - 1)
     def _flush():
-        out_ref[0] = _flush_value(acc_ref[...], b_ref,
-                                  epi).astype(out_ref.dtype)
+        res = res_ref[0] if epi.residual else None
+        out_ref[0] = _flush_value(acc_ref[...], b_ref, epi,
+                                  res).astype(out_ref.dtype)
 
 
 def _ws_psum_kernel(x_ref, w_ref, out_ref, *, r: int, s: int, stride: int,
@@ -174,7 +187,8 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
                   interpret: Optional[bool] = None,
                   out_dtype=None,
                   bias: Optional[jnp.ndarray] = None,
-                  epilogue: Optional[Epilogue] = None) -> jnp.ndarray:
+                  epilogue: Optional[Epilogue] = None,
+                  residual: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Run the fold-streamed conv kernel on a PRE-PADDED input.
 
     x_padded: (N, C, Xp, Yp)   w: (NF, C, R, S)   -> (N, NF, P', Q')
@@ -186,7 +200,9 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     to the actual dims here, which is what makes schedule reuse exact.
     ``interpret=None`` resolves via the engine's backend policy (real
     lowering on TPU, interpreter elsewhere).  ``epilogue`` (with ``bias``
-    when ``epilogue.bias``) is flushed in-kernel — see ``core/epilogue.py``.
+    when ``epilogue.bias``, and ``residual`` — an (N, NF, P, Q) shortcut —
+    when ``epilogue.residual``) is flushed in-kernel — see
+    ``core/epilogue.py``.
     """
     n, c, xp_, yp_ = x_padded.shape
     nf, cw, r, s = w.shape
@@ -197,6 +213,13 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     epi = epilogue or Epilogue()
     if epi.bias and bias is None:
         raise ValueError("epilogue.bias=True needs a bias vector")
+    if epi.residual:
+        if residual is None:
+            raise ValueError("epilogue.residual=True needs a residual "
+                             "tensor")
+        if tuple(residual.shape) != (n, nf, p, q):
+            raise ValueError(f"residual shape {tuple(residual.shape)} != "
+                             f"conv output {(n, nf, p, q)}")
     if epi.pool == "max2" and (p < 2 or q < 2):
         raise ValueError(f"cannot fuse 2x2 pool into a {p}x{q} output")
     if interpret is None:
@@ -228,12 +251,15 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
         w = jnp.pad(w, ((0, nf_pad - nf), (0, c_pad - c), (0, 0), (0, 0)))
     xp_r = x_padded.shape[2]
 
+    # a fused residual rides along full-height, resident like the
+    # accumulator — it doubles the WS footprint the spill check must price
+    ws_resident = nf_b * p_pad * q * 4 * (2 if epi.residual else 1)
     if (dataflow == "weight_stationary"
-            and nf_b * p_pad * q * 4 > WS_ACC_BYTES_LIMIT):
-        # the full-height fp32 accumulator would not fit VMEM: fall back
-        # to psum staging (or to the block-accumulator OS kernel when an
-        # epilogue must flush in-kernel) — mirrored by the spill price in
-        # ``core/engine.py:dataflow_traffic_bytes``
+            and ws_resident > WS_ACC_BYTES_LIMIT):
+        # the full-height fp32 accumulator (+ resident residual) would not
+        # fit VMEM: fall back to psum staging (or to the block-accumulator
+        # OS kernel when an epilogue must flush in-kernel) — mirrored by
+        # the spill price in ``core/engine.py:dataflow_traffic_bytes``
         dataflow = ("weight_stationary_psum" if epi.identity
                     else "output_stationary")
 
@@ -272,6 +298,12 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     else:
         b_arr = jnp.zeros((nf_pad, 1), jnp.float32)
 
+    if epi.residual and (nf_pad != nf or p_pad != p):
+        # zero-padded shortcut rows/filters align with the padded output
+        # blocks and are sliced away with them below
+        residual = jnp.pad(residual, ((0, 0), (0, nf_pad - nf),
+                                      (0, p_pad - p), (0, 0)))
+
     pooled = epi.pool == "max2"
     p_o_pad = p_pad // 2 if pooled else p_pad
     q_o = q // 2 if pooled else q
@@ -280,16 +312,23 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     if dataflow == "weight_stationary":
         kern = functools.partial(_ws_kernel, r=r, s=s, stride=stride,
                                  p_block=p_b, q=q, n_c=g_c, epi=epi)
+        in_specs = [
+            pl.BlockSpec((1, c_b, xp_r, yp_),
+                         lambda b, f, cc, pp: (b, cc, 0, 0)),
+            pl.BlockSpec((nf_b, c_b, r, s),
+                         lambda b, f, cc, pp: (f, cc, 0, 0)),
+            pl.BlockSpec((nf_b, 1), lambda b, f, cc, pp: (f, 0)),
+        ]
+        args = [x_padded, w, b_arr]
+        if epi.residual:
+            # resident like the output: constant along (c, p)
+            in_specs.append(pl.BlockSpec((1, nf_b, p_pad, q),
+                                         lambda b, f, cc, pp: (b, f, 0, 0)))
+            args.append(residual)
         out = pl.pallas_call(
             kern,
             grid=(n, g_nf, g_c, g_p),
-            in_specs=[
-                pl.BlockSpec((1, c_b, xp_r, yp_),
-                             lambda b, f, cc, pp: (b, cc, 0, 0)),
-                pl.BlockSpec((nf_b, c_b, r, s),
-                             lambda b, f, cc, pp: (f, cc, 0, 0)),
-                pl.BlockSpec((nf_b, 1), lambda b, f, cc, pp: (f, 0)),
-            ],
+            in_specs=in_specs,
             # constant along (c, p): the finished output stays resident in
             # VMEM for the whole sweep and hits HBM exactly once
             out_specs=pl.BlockSpec((1, nf_b, p_o_pad, q_o),
@@ -298,26 +337,32 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
                                            out_dtype),
             scratch_shapes=[pltpu.VMEM((nf_b, p_pad, q), jnp.float32)],
             interpret=interpret,
-        )(x_padded, w, b_arr)
+        )(*args)
     else:  # output_stationary
         p_b_o = p_b // 2 if pooled else p_b
         kern = functools.partial(_os_kernel, r=r, s=s, stride=stride,
                                  p_block=p_b, q=q, n_c=g_c, epi=epi)
+        in_specs = [
+            pl.BlockSpec((1, c_b, xp_r, yp_),
+                         lambda b, f, pp, cc: (b, cc, 0, 0)),
+            pl.BlockSpec((nf_b, c_b, r, s),
+                         lambda b, f, pp, cc: (f, cc, 0, 0)),
+            pl.BlockSpec((nf_b, 1), lambda b, f, pp, cc: (f, 0)),
+        ]
+        args = [x_padded, w, b_arr]
+        if epi.residual:
+            in_specs.append(pl.BlockSpec((1, nf_b, p_b, q),
+                                         lambda b, f, pp, cc: (b, f, pp, 0)))
+            args.append(residual)
         out = pl.pallas_call(
             kern,
             grid=(n, g_nf, g_p, g_c),
-            in_specs=[
-                pl.BlockSpec((1, c_b, xp_r, yp_),
-                             lambda b, f, pp, cc: (b, cc, 0, 0)),
-                pl.BlockSpec((nf_b, c_b, r, s),
-                             lambda b, f, pp, cc: (f, cc, 0, 0)),
-                pl.BlockSpec((nf_b, 1), lambda b, f, pp, cc: (f, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, nf_b, p_b_o, q_o),
                                    lambda b, f, pp, cc: (b, f, pp, 0)),
             out_shape=jax.ShapeDtypeStruct((n, nf_pad, p_o_pad, q_o),
                                            out_dtype),
             scratch_shapes=[pltpu.VMEM((nf_b, p_b, q), jnp.float32)],
             interpret=interpret,
-        )(x_padded, w, b_arr)
+        )(*args)
     return out[:, :nf, :p_valid, :q_valid]

@@ -145,17 +145,17 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0,
 
 
 def _conv2d_fused_fwd_impl(x, w, b, stride: int, pad: int, epi: Epilogue,
-                           impl: str, plan, interpret):
+                           impl: str, plan, interpret, residual=None):
     if impl in _FOLD_IMPLS:
         plan, dataflow = _resolve_fold_dataflow(x, w, stride, pad, impl, plan)
         xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
         return conv2d_folded(xp, w, stride=stride, dataflow=dataflow,
                              plan=plan, interpret=interpret,
-                             bias=b, epilogue=epi)
+                             bias=b, epilogue=epi, residual=residual)
     # non-Pallas impls: run the plain conv, then the reference epilogue
     # chain (XLA fuses it into the same computation anyway)
     y = _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret)
-    return apply_epilogue(y, b, epi)
+    return apply_epilogue(y, b, epi, residual)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
@@ -186,23 +186,64 @@ def _conv2d_fused_vjp_bwd(stride, pad, epi, impl, plan, interpret, res, g):
 _conv2d_fused.defvjp(_conv2d_fused_vjp_fwd, _conv2d_fused_vjp_bwd)
 
 
+# residual variant: the shortcut is a fourth differentiable input, so
+# ResNet blocks built on the fused op train end to end
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _conv2d_fused_res(x, w, b, res, stride, pad, epi, impl, plan, interpret):
+    return _conv2d_fused_fwd_impl(x, w, b, stride, pad, epi, impl, plan,
+                                  interpret, residual=res)
+
+
+def _conv2d_fused_res_vjp_fwd(x, w, b, res, stride, pad, epi, impl, plan,
+                              interpret):
+    out = _conv2d_fused_fwd_impl(x, w, b, stride, pad, epi, impl, plan,
+                                 interpret, residual=res)
+    return out, (x, w, b, res)
+
+
+def _conv2d_fused_res_vjp_bwd(stride, pad, epi, impl, plan, interpret,
+                              saved, g):
+    x, w, b, res = saved
+
+    def ref_chain(x, w, b, res):
+        return apply_epilogue(_ref.conv2d_direct(x, w, stride, pad), b, epi,
+                              res)
+
+    _, vjp = jax.vjp(ref_chain, x, w, b, res)
+    return vjp(g)
+
+
+_conv2d_fused_res.defvjp(_conv2d_fused_res_vjp_fwd, _conv2d_fused_res_vjp_bwd)
+
+
 def conv2d_fused(x: jnp.ndarray, w: jnp.ndarray,
                  b: Optional[jnp.ndarray] = None, *, stride: int = 1,
                  pad: int = 0, epilogue: Optional[Epilogue] = None,
                  impl: Optional[str] = None, plan=None,
-                 interpret: Optional[bool] = None) -> jnp.ndarray:
+                 interpret: Optional[bool] = None,
+                 residual: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Convolution with the epilogue flushed in-kernel.  x: NCHW, w: OIHW,
-    b: (NF,) per-filter bias (required when ``epilogue.bias``).
+    b: (NF,) per-filter bias (required when ``epilogue.bias``),
+    residual: (N, NF, P, Q) shortcut (required when ``epilogue.residual``).
 
     On the fold impls the epilogue executes inside the conv's single
     ``pallas_call`` at partial-sum flush time (``kernels/conv2d_ws.py``);
-    the whole conv→bias→ReLU(→pool) chain is one kernel launch and the
-    pre-activation tensor never reaches HBM.  Output is (N, NF, P, Q), or
-    (N, NF, P//2, Q//2) when ``epilogue.pool`` fuses the 2x2 max-pool.
+    the whole conv→bias(→+shortcut)→ReLU(→pool) chain is one kernel launch
+    and the pre-activation tensor never reaches HBM.  Output is
+    (N, NF, P, Q), or (N, NF, P//2, Q//2) when ``epilogue.pool`` fuses the
+    2x2 max-pool.
     """
-    epi = epilogue if epilogue is not None else Epilogue(bias=b is not None)
-    return _conv2d_fused(x, w, b, stride, pad, epi,
-                         impl or default_conv_impl(), plan, interpret)
+    epi = epilogue if epilogue is not None else Epilogue(
+        bias=b is not None, residual=residual is not None)
+    if epi.residual != (residual is not None):
+        raise ValueError("epilogue.residual and the residual argument must "
+                         "be supplied together")
+    fwd_impl = impl or default_conv_impl()
+    if residual is not None:
+        return _conv2d_fused_res(x, w, b, residual, stride, pad, epi,
+                                 fwd_impl, plan, interpret)
+    return _conv2d_fused(x, w, b, stride, pad, epi, fwd_impl, plan,
+                         interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,20 @@
-"""Serving launcher: batched requests through the BatchEngine.
+"""Serving launcher: token requests through the BatchEngine, or — with
+``--vision`` — an image request stream through the continuous-batching
+vision engine (``serve/vision.py``).
 
-``python -m repro.launch.serve --arch qwen3-4b --requests 8``
+    python -m repro.launch.serve --arch qwen3-4b --requests 8
+    python -m repro.launch.serve --vision --requests 32 --backend interpret
+
+The vision path serves a deterministic mixed-size request stream through
+the bucketed ``CompiledNetwork`` forwards and merges its measured metrics
+(KIPS, latency percentiles, slot occupancy, fold-reuse rates) into
+``BENCH_vgg.json`` — the CI serving smoke job.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -14,18 +24,48 @@ from repro.configs.registry import get_config
 from repro.models import api
 from repro.serve.engine import BatchEngine, Request
 
+# --backend choice -> core/engine.py execution policy
+VISION_POLICIES = {"auto": "auto", "interpret": "pallas",
+                   "reference": "reference"}
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--new-tokens", type=int, default=12)
-    args = ap.parse_args()
 
+def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json") -> None:
+    """Merge the serving section into the perf snapshot, preserving the
+    micro-bench sections ``benchmarks/run.py`` wrote (and tolerating a
+    missing or corrupt file — same discipline as the tuning cache)."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    if not isinstance(data, dict):
+        data = {}
+    data["serving"] = summary
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"# wrote serving metrics into {path}")
+
+
+def vision_main(args) -> dict:
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve.vision import serving_summary
+    mesh = None
+    if args.mesh:
+        data, model = (int(t) for t in args.mesh.lower().split("x"))
+        mesh = make_local_mesh(data, model)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    summary = serving_summary(
+        requests=args.requests, img=args.img, width_mult=args.width,
+        policy=VISION_POLICIES[args.backend], buckets=buckets, mesh=mesh,
+        seed=args.seed, autotune=args.autotune,
+        tuning_path=args.tuning_path or None, verbose=True)
+    merge_bench_json(summary, args.bench_json)
+    return summary
+
+
+def token_main(args) -> None:
     cfg = get_config(args.arch, reduced=not args.full)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     engine = BatchEngine(cfg, params, batch=args.batch,
@@ -48,6 +88,43 @@ def main():
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {list(r.prompt)} -> {r.output}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    # token serving
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    # vision serving
+    ap.add_argument("--vision", action="store_true",
+                    help="serve an image stream through the compiled "
+                         "fold-schedule engine instead of token decode")
+    ap.add_argument("--backend", choices=sorted(VISION_POLICIES),
+                    default="auto",
+                    help="vision execution: auto (backend policy), "
+                         "interpret (Pallas fold kernels, interpreted "
+                         "off-TPU), reference")
+    ap.add_argument("--img", type=int, default=32)
+    ap.add_argument("--width", type=float, default=0.0625,
+                    help="VGG width multiplier")
+    ap.add_argument("--buckets", default="1,2,4,8",
+                    help="comma-separated batch bucket widths")
+    ap.add_argument("--mesh", default="",
+                    help='optional "DATAxMODEL" local mesh, e.g. "2x1"')
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--tuning-path", default="")
+    ap.add_argument("--bench-json", default="BENCH_vgg.json")
+    args = ap.parse_args()
+    if args.vision:
+        vision_main(args)
+    else:
+        token_main(args)
 
 
 if __name__ == "__main__":

@@ -16,15 +16,16 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import (CompiledNetwork, ScheduleCache,
-                               compile_network, maxpool2, vgg_head)
+from repro.core.engine import (BucketCompiler, CompiledNetwork,
+                               ScheduleCache, compile_network, maxpool2,
+                               vgg_head)
 from repro.core.loopnest import ConvLoopNest
 from repro.kernels.ops import conv2d
 
 from repro.models.common import Axes, TreeMaker
 
 __all__ = ["VGG_LAYERS", "init_params", "forward", "compile_forward",
-           "n_classes"]
+           "bucket_compiler", "n_classes"]
 
 # (name, in_ch, out_ch) conv3x3 blocks; "M" = 2x2 maxpool (paper Table 2B)
 VGG_LAYERS: Tuple = (
@@ -130,3 +131,14 @@ def compile_forward(params: Dict[str, Any], *, img: int, batch: int = 1,
                            policy=policy, cache=cache, jit=jit,
                            fuse_epilogues=fuse_epilogues, autotune=autotune,
                            tuning_path=tuning_path, **compile_kw)
+
+
+def bucket_compiler(params: Dict[str, Any], *, img: int,
+                    policy: str = "auto",
+                    cache: Optional[ScheduleCache] = None,
+                    **compile_kw) -> BucketCompiler:
+    """The serving compile surface: one memoized ``compile_forward`` per
+    batch-bucket width, all widths sharing one ``ScheduleCache`` (and one
+    tuning JSON, when autotuning) — see ``serve/vision.py``."""
+    return BucketCompiler(params, VGG_LAYERS, img, policy=policy,
+                          cache=cache, **compile_kw)

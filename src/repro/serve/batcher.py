@@ -1,0 +1,180 @@
+"""Host-side continuous batching for image serving (DESIGN.md §6).
+
+The paper's KIPS figure is a *serving* metric: images arrive as a stream
+and the accelerator keeps its image-fold pipeline full.  This module is
+the host half of that discipline — a FIFO request queue packed into
+**bucketed** device batches:
+
+* An ``ImageRequest`` carries 1..k images (a client mini-batch).  The
+  image is the fold unit, so a request occupies as many batch *slots* as
+  it has images.
+* ``BucketPolicy`` fixes the small set of batch widths the device ever
+  sees.  One jitted forward exists per width (``core/engine.py:
+  BucketCompiler``), so padding requests up to the nearest bucket trades
+  a few wasted slots for a stable compiled program — the standard
+  continuous-batching bargain.
+* ``ImageBatcher.form`` packs the queue greedily *in arrival order* —
+  drain order is strictly FIFO — and zero-pads the batch up to the chosen
+  bucket.  Padding rows are dead slots, sliced away after the forward;
+  correctness needs no masking inside the network because every batch
+  row's computation is independent (asserted bitwise in
+  ``tests/test_vision_serving.py``).
+
+Everything here is numpy + plain Python: the device side (staging,
+sharding, compiled forwards, metrics) lives in ``serve/vision.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["ImageRequest", "BucketPolicy", "FormedBatch", "ImageBatcher"]
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    """One client request: ``images`` is (n, C, H, W); ``logits`` is filled
+    with the (n, classes) result when ``done``."""
+    rid: int
+    images: np.ndarray
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    logits: Optional[np.ndarray] = None
+    done: bool = False
+
+    @property
+    def n(self) -> int:
+        return int(self.images.shape[0])
+
+    @property
+    def latency_s(self) -> float:
+        if not self.done:
+            raise ValueError(f"request {self.rid} is not done")
+        return self.t_done - self.t_submit
+
+
+class BucketPolicy:
+    """The fixed, ascending set of batch widths served to the device.
+
+    ``bucket_for(n)`` is a pure function of ``n`` (the smallest width that
+    fits) — bucket selection is deterministic by construction, which is
+    what keeps the compiled-forward set closed."""
+
+    def __init__(self, widths: Sequence[int] = (1, 2, 4, 8)):
+        ws = sorted({int(w) for w in widths})
+        if not ws or ws[0] < 1:
+            raise ValueError(f"bucket widths must be >= 1, got {widths}")
+        self.widths: Tuple[int, ...] = tuple(ws)
+
+    @property
+    def max_width(self) -> int:
+        return self.widths[-1]
+
+    def bucket_for(self, n: int) -> int:
+        if n < 1:
+            raise ValueError(f"need at least one image, got {n}")
+        for w in self.widths:
+            if w >= n:
+                return w
+        raise ValueError(f"{n} images exceed the largest bucket "
+                         f"({self.max_width})")
+
+    def aligned(self, multiple: int) -> "BucketPolicy":
+        """Every width rounded up to ``multiple`` — the mesh data-axis
+        size, so sharded batches always divide across devices."""
+        m = max(1, int(multiple))
+        return BucketPolicy(tuple(-(-w // m) * m for w in self.widths))
+
+    def __repr__(self) -> str:
+        return f"BucketPolicy{self.widths}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FormedBatch:
+    """One device batch: ``x`` is (bucket, C, H, W), rows ``[n_images:]``
+    are zero padding."""
+    requests: Tuple[ImageRequest, ...]
+    x: np.ndarray
+    bucket: int
+    n_images: int
+
+    @property
+    def occupancy(self) -> float:
+        """Real rows / bucket width — the slot-occupancy serving metric."""
+        return self.n_images / self.bucket
+
+
+class ImageBatcher:
+    """FIFO request queue → ``FormedBatch``.
+
+    Packing is greedy in arrival order: requests join the batch while
+    their images still fit in ``policy.max_width`` (the head request
+    always fits, since ``submit`` rejects anything larger), then the
+    batch pads up to ``bucket_for(total)``.  No request is ever skipped
+    or reordered, so completion order equals submission order.
+    """
+
+    def __init__(self, policy: BucketPolicy, img: int, chan: int = 3,
+                 dtype=np.float32):
+        self.policy = policy
+        self.img = int(img)
+        self.chan = int(chan)
+        self.dtype = dtype
+        self.queue: List[ImageRequest] = []
+        self._next_rid = 0
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    @property
+    def pending_images(self) -> int:
+        return sum(r.n for r in self.queue)
+
+    def submit(self, images: np.ndarray) -> ImageRequest:
+        images = np.asarray(images, self.dtype)
+        if images.ndim == 3:
+            images = images[None]
+        want = (self.chan, self.img, self.img)
+        if images.ndim != 4 or images.shape[1:] != want:
+            raise ValueError(f"request images must be (n, {self.chan}, "
+                             f"{self.img}, {self.img}), got {images.shape}")
+        if images.shape[0] > self.policy.max_width:
+            raise ValueError(
+                f"request of {images.shape[0]} images exceeds the largest "
+                f"bucket ({self.policy.max_width}); split it client-side")
+        req = ImageRequest(rid=self._next_rid, images=images,
+                           t_submit=time.monotonic())
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def form(self) -> Optional[FormedBatch]:
+        if not self.queue:
+            return None
+        take: List[ImageRequest] = []
+        total = 0
+        while self.queue and total + self.queue[0].n <= self.policy.max_width:
+            req = self.queue.pop(0)
+            take.append(req)
+            total += req.n
+        bucket = self.policy.bucket_for(total)
+        x = np.zeros((bucket, self.chan, self.img, self.img), self.dtype)
+        x[:total] = np.concatenate([r.images for r in take])
+        return FormedBatch(requests=tuple(take), x=x, bucket=bucket,
+                           n_images=total)
+
+    @staticmethod
+    def scatter(batch: FormedBatch, logits: np.ndarray,
+                t_done: Optional[float] = None) -> None:
+        """Slice bucket-width logits back to per-request outputs (padding
+        rows are simply never read)."""
+        t_done = time.monotonic() if t_done is None else t_done
+        off = 0
+        for req in batch.requests:
+            req.logits = logits[off:off + req.n]
+            off += req.n
+            req.t_done = t_done
+            req.done = True

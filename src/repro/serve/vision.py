@@ -1,0 +1,291 @@
+"""Continuous-batching image-inference engine over the compiled
+fold-schedule engine (DESIGN.md §6).
+
+Mirrors the slot/queue design of ``serve/engine.py`` (the token engine)
+but drives ``core/engine.py:CompiledNetwork`` forwards instead of decode
+steps:
+
+* batches form from a FIFO queue with **bucketed** widths
+  (``serve/batcher.py``) — one jitted forward per bucket, all buckets
+  sharing one ``ScheduleCache`` via ``BucketCompiler`` so fold planning
+  and (optional) measured autotuning are pay-once across buckets;
+* execution **shards across a mesh** by binding the batch (image-fold)
+  axis and the N_F (filter-fold) axis to mesh axes through
+  ``core/mapping.py:serving_conv_plan``'s ``partition_spec``
+  (``distributed/sharding.py:vision_shardings``) — the identical engine
+  code runs a 1-device CPU CI and a multi-device mesh;
+* host→device staging **overlaps compute** with a double-buffered
+  feeder: while the device runs batch k, batch k+1 is formed and
+  ``device_put`` (the ``data/pipeline.py`` idiom of keeping the host one
+  step ahead of the device);
+* serving metrics — measured KIPS, p50/p95/p99 request latency, slot
+  occupancy, schedule-cache / fold-reuse hit rates — snapshot into
+  ``BENCH_vgg.json`` via ``benchmarks/run.py`` and
+  ``launch/serve.py --vision``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import BucketCompiler, ScheduleCache
+from repro.core.mapping import serving_conv_plan
+from repro.serve.batcher import (BucketPolicy, FormedBatch, ImageBatcher,
+                                 ImageRequest)
+
+__all__ = ["ServingMetrics", "VisionEngine", "serving_summary"]
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Accumulated over ``VisionEngine.run`` calls (warmup excluded)."""
+    images: int = 0
+    requests: int = 0
+    batches: int = 0
+    elapsed_s: float = 0.0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    occupancies: List[float] = dataclasses.field(default_factory=list)
+    per_bucket: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def kips(self) -> float:
+        """Measured kilo-images-per-second — the paper's eq (13) unit,
+        here from wall clock rather than the cycle model."""
+        return self.images / self.elapsed_s / 1e3 if self.elapsed_s else 0.0
+
+    @property
+    def slot_occupancy(self) -> float:
+        return (sum(self.occupancies) / len(self.occupancies)
+                if self.occupancies else 0.0)
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        if not self.latencies_s:
+            return {"p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
+        lat = np.asarray(self.latencies_s)
+        return {"p50_s": round(float(np.percentile(lat, 50)), 6),
+                "p95_s": round(float(np.percentile(lat, 95)), 6),
+                "p99_s": round(float(np.percentile(lat, 99)), 6),
+                "mean_s": round(float(lat.mean()), 6)}
+
+    def as_dict(self) -> dict:
+        return {
+            "images": self.images,
+            "requests": self.requests,
+            "batches": self.batches,
+            "elapsed_s": round(self.elapsed_s, 4),
+            "kips": round(self.kips, 6),
+            "images_per_s": round(self.images / self.elapsed_s, 3)
+                            if self.elapsed_s else 0.0,
+            "latency": self.latency_percentiles(),
+            "slot_occupancy": round(self.slot_occupancy, 4),
+            "per_bucket_batches": {str(k): v for k, v
+                                   in sorted(self.per_bucket.items())},
+        }
+
+
+class VisionEngine:
+    """Serve a stream of image requests through bucketed compiled forwards.
+
+    ``submit`` then ``run`` (or ``step`` one batch at a time).  Outputs
+    land on each request's ``logits`` and are bitwise-equal, per request,
+    to a direct ``compile_network`` forward of the same images — padding
+    and packing are pure batching concerns, invisible to the numerics.
+
+    With ``mesh``, bucket widths round up to the data-axis size, params
+    are placed by ``vision_shardings`` (conv weights and biases on the
+    N_F filter-fold axis, everything else replicated) and every staged
+    batch carries the ``serving_conv_plan`` batch sharding — GSPMD then
+    runs the same jitted forwards data+model parallel.
+    """
+
+    def __init__(self, params: Dict[str, Any], layers: Sequence, *,
+                 img: int, chan: int = 3, policy: str = "auto",
+                 buckets: Sequence[int] = (1, 2, 4, 8),
+                 mesh=None, data_axis: str = "data",
+                 model_axis: str = "model",
+                 cache: Optional[ScheduleCache] = None,
+                 head: Optional[Callable] = None,
+                 fuse_epilogues: bool = True, autotune: bool = False,
+                 tuning_path: Optional[str] = None,
+                 autotune_timer: Optional[Callable] = None):
+        bucket_policy = BucketPolicy(buckets)
+        self.mesh = mesh
+        self._x_sharding = None
+        self.plan = None
+        if mesh is not None:
+            from repro.distributed.sharding import (vision_batch_sharding,
+                                                    vision_shardings)
+            data = mesh.shape.get(data_axis, 1)
+            bucket_policy = bucket_policy.aligned(data)
+            nf_max = max((int(leaf["w"].shape[0])
+                          for leaf in params.values()
+                          if isinstance(leaf, dict) and "w" in leaf
+                          and getattr(leaf["w"], "ndim", 0) == 4),
+                         default=1)
+            self.plan = serving_conv_plan(bucket_policy.max_width, nf_max,
+                                          data_axis=data_axis,
+                                          model_axis=model_axis)
+            params = jax.device_put(params,
+                                    vision_shardings(params, mesh, self.plan))
+            self._x_sharding = vision_batch_sharding(mesh, self.plan)
+        self.params = params
+        self.batcher = ImageBatcher(bucket_policy, img, chan)
+        self.compiler = BucketCompiler(
+            params, layers, img, chan=chan, policy=policy, cache=cache,
+            head=head, fuse_epilogues=fuse_epilogues, autotune=autotune,
+            tuning_path=tuning_path, autotune_timer=autotune_timer)
+        self.metrics = ServingMetrics()
+
+    # -- request side ------------------------------------------------------
+    def submit(self, images: np.ndarray) -> ImageRequest:
+        return self.batcher.submit(images)
+
+    @property
+    def pending(self) -> int:
+        return len(self.batcher)
+
+    # -- device side -------------------------------------------------------
+    def _stage(self) -> Optional[Tuple[FormedBatch, jnp.ndarray]]:
+        """Form the next batch and start its host→device transfer (an
+        async ``device_put`` — the front half of the double buffer)."""
+        fb = self.batcher.form()
+        if fb is None:
+            return None
+        # one transfer, straight to the (possibly sharded) device layout —
+        # never commit to the default device first and reshard
+        if self._x_sharding is not None:
+            x = jax.device_put(fb.x, self._x_sharding)
+        else:
+            x = jnp.asarray(fb.x)
+        return fb, x
+
+    def _dispatch(self, staged: Tuple[FormedBatch, jnp.ndarray]):
+        """Launch the bucket's compiled forward; returns without waiting
+        (jit dispatch is async — the device computes while the host forms
+        and stages the next batch)."""
+        fb, x = staged
+        net = self.compiler.network_for(fb.bucket)
+        return fb, net(self.params, x)
+
+    def _complete(self, inflight, record: bool = True) -> None:
+        fb, out = inflight
+        logits = np.asarray(out)            # blocks until the device is done
+        t_done = time.monotonic()
+        ImageBatcher.scatter(fb, logits, t_done)
+        if not record:
+            return
+        m = self.metrics
+        m.images += fb.n_images
+        m.requests += len(fb.requests)
+        m.batches += 1
+        m.occupancies.append(fb.occupancy)
+        m.per_bucket[fb.bucket] = m.per_bucket.get(fb.bucket, 0) + 1
+        m.latencies_s.extend(r.latency_s for r in fb.requests)
+
+    def warmup(self) -> List[int]:
+        """Compile and run every bucket width once on zeros, so serving
+        latencies measure steady-state forwards, not XLA traces.  Returns
+        the widths warmed."""
+        widths = list(self.batcher.policy.widths)
+        for w in widths:
+            net = self.compiler.network_for(w)
+            zeros = np.zeros((w, self.batcher.chan, self.batcher.img,
+                              self.batcher.img), np.float32)
+            if self._x_sharding is not None:
+                x = jax.device_put(zeros, self._x_sharding)
+            else:
+                x = jnp.asarray(zeros)
+            np.asarray(net(self.params, x))
+        return widths
+
+    def step(self) -> int:
+        """Serve one batch synchronously; returns #images served (0 when
+        the queue is empty)."""
+        t0 = time.monotonic()
+        staged = self._stage()
+        if staged is None:
+            return 0
+        self._complete(self._dispatch(staged))
+        self.metrics.elapsed_s += time.monotonic() - t0
+        return staged[0].n_images
+
+    def run(self, max_batches: int = 1_000_000) -> ServingMetrics:
+        """Drain the queue with the double-buffered feeder: batch k+1 is
+        formed and staged host→device while the device computes batch k,
+        and completion (the blocking readback) happens only after k+1 has
+        been dispatched."""
+        t0 = time.monotonic()
+        inflight = None
+        batches = 0
+        # a batch is only formed (popping its requests) while the budget
+        # allows dispatching it, so no request is ever staged and dropped
+        staged = self._stage() if max_batches > 0 else None
+        while staged is not None or inflight is not None:
+            nxt = None
+            if staged is not None:
+                nxt = self._dispatch(staged)
+                batches += 1
+            # host work overlaps the device computing `nxt`
+            staged = self._stage() if batches < max_batches else None
+            if inflight is not None:
+                self._complete(inflight)
+            inflight = nxt
+        self.metrics.elapsed_s += time.monotonic() - t0
+        return self.metrics
+
+    # -- reporting ---------------------------------------------------------
+    def metrics_dict(self) -> dict:
+        d = self.metrics.as_dict()
+        d["compile"] = self.compiler.stats()    # buckets + fold-reuse rates
+        d["buckets"] = list(self.batcher.policy.widths)
+        d["mesh"] = (dict(self.mesh.shape) if self.mesh is not None else None)
+        return d
+
+
+def serving_summary(*, requests: int = 32, img: int = 32,
+                    width_mult: float = 0.0625, classes: int = 10,
+                    policy: str = "auto", buckets: Sequence[int] = (1, 2, 4, 8),
+                    mesh=None, seed: int = 0, autotune: bool = False,
+                    tuning_path: Optional[str] = None,
+                    verbose: bool = False) -> dict:
+    """Serve a deterministic mixed-size random request stream through a
+    reduced VGG-16 and return the metrics dict (the ``serving`` section of
+    ``BENCH_vgg.json``).  Shared by ``launch/serve.py --vision`` and
+    ``benchmarks/run.py``."""
+    from repro.models import vgg
+    params = vgg.init_params(jax.random.PRNGKey(0), width_mult=width_mult,
+                             img=img, classes=classes)
+    engine = VisionEngine(params, vgg.VGG_LAYERS, img=img, policy=policy,
+                          buckets=buckets, mesh=mesh, autotune=autotune,
+                          tuning_path=tuning_path)
+    engine.warmup()
+    rng = np.random.default_rng(seed)
+    max_n = engine.batcher.policy.max_width
+    sizes = rng.integers(1, max_n + 1, requests)
+    for n in sizes:
+        engine.submit(rng.standard_normal((int(n), 3, img, img))
+                      .astype(np.float32))
+    engine.run()
+    d = engine.metrics_dict()
+    d["workload"] = {"model": "vgg16", "width_mult": width_mult, "img": img,
+                     "requests": int(requests), "policy": policy,
+                     "seed": seed, "backend": jax.default_backend()}
+    if verbose:
+        lat = d["latency"]
+        print(f"served {d['requests']} requests / {d['images']} images in "
+              f"{d['elapsed_s']}s: {d['kips']} KIPS "
+              f"({d['images_per_s']} img/s)")
+        print(f"latency p50={lat['p50_s']}s p95={lat['p95_s']}s "
+              f"p99={lat['p99_s']}s; slot occupancy "
+              f"{d['slot_occupancy']}; batches/bucket "
+              f"{d['per_bucket_batches']}")
+        c = d["compile"]
+        print(f"buckets compiled {c['buckets']}, "
+              f"{c['distinct_schedules']} distinct schedules, "
+              f"schedule-cache hit_rate={c['hit_rate']}")
+    return d
