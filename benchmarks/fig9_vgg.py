@@ -117,14 +117,15 @@ def _pr1_engine(params, sched_by_name, interpret: bool):
     """The PR-1 engine, faithfully: heuristic cost-model schedules, psum-
     staging weight-stationary kernels, and separate XLA bias/ReLU/pool."""
     import jax
-    from repro.core.engine import maxpool2, vgg_head
+    from repro.core.epilogue import maxpool2x2
     from repro.kernels.ops import conv2d
     from repro.models import vgg
+    from repro.models.vgg import vgg_head
 
     def forward(p, xx):
         for entry in vgg.VGG_LAYERS:
             if entry == "M":
-                xx = maxpool2(xx)
+                xx = maxpool2x2(xx)
                 continue
             name = entry[0]
             s = sched_by_name[name]
@@ -249,41 +250,37 @@ def measured_tuned(width: float = 0.25, img: int = 32, batch: int = 2
     return out
 
 
-def bench_summary(width: float = 0.0625, img: int = 32, batch: int = 2
-                  ) -> dict:
-    """Machine-readable micro-bench for CI perf tracking (BENCH_vgg.json).
-
-    Interpreter-mode sized: the numbers track the *trajectory* of the
-    engine hot path per PR, not absolute hardware performance.
-    """
+def model_micro(model: str, width: float = 0.0625, img: int = 32,
+                batch: int = 2, classes: int = 10) -> dict:
+    """Per-model micro-bench through the streaming-graph lowering: any
+    registered model (``models/zoo.py``) compiles via ``compile_network``
+    and reports auto/fused/unfused per-image latency plus its fold-reuse
+    metric — the per-model section of the bench JSON."""
     import jax
-    from benchmarks.kernel_bench import dataflow_traffic
-    from repro.models import vgg
+    from repro.core.engine import compile_network
+    from repro.models.zoo import get_conv_model
 
-    params = vgg.init_params(jax.random.PRNGKey(0), width_mult=width,
-                             img=img, classes=10)
+    spec = get_conv_model(model)
+    params = spec.init_params(jax.random.PRNGKey(0), width_mult=width,
+                              img=img, classes=classes)
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, 3, img, img))
 
-    auto_net = vgg.compile_forward(params, img=img, batch=batch,
-                                   policy="auto")
+    def compiled(policy, fuse=True, cache=None):
+        return compile_network(params, spec.to_graph(),
+                               (batch, 3, img, img), policy=policy,
+                               fuse_epilogues=fuse, cache=cache)
+
+    auto_net = compiled("auto")
     _, t_auto = _time_forward(auto_net.apply, params, x)
-    unfused = vgg.compile_forward(params, img=img, batch=batch,
-                                  policy="pallas", fuse_epilogues=False)
-    fused = vgg.compile_forward(params, img=img, batch=batch,
-                                policy="pallas")
+    # the fused net compiles against a fresh cache so its build stats ARE
+    # the model's fold-reuse metric (a pre-warmed cache would report a
+    # meaningless 100% hit rate); the unfused net then shares that cache
+    fused = compiled("pallas")
+    unfused = compiled("pallas", fuse=False, cache=fused.cache)
     _, t_un = _time_forward(unfused.apply, params, x)
     _, t_fu = _time_forward(fused.apply, params, x)
-
-    # full-size VGG-16 bytes-moved model: PR-1 psum WS vs in-kernel WS
-    bytes_psum = bytes_ws = bytes_os = 0
-    for _, cv in vgg16_conv_layers():
-        tm = dataflow_traffic(cv)
-        bytes_psum += tm["weight_stationary_psum"]
-        bytes_ws += tm["weight_stationary"]
-        bytes_os += tm["output_stationary"]
-
-    return {
-        "workload": {"model": "vgg16", "width_mult": width, "img": img,
+    out = {
+        "workload": {"model": model, "width_mult": width, "img": img,
                      "batch": batch, "backend": jax.default_backend()},
         "latency": {
             "auto_per_img_s": round(t_auto / batch, 6),
@@ -292,13 +289,41 @@ def bench_summary(width: float = 0.0625, img: int = 32, batch: int = 2
             "fused_speedup": round(t_un / t_fu, 3),
         },
         "fold_reuse": fused.fold_reuse(),
-        "bytes_moved_model_fullsize": {
-            "ws_psum_pr1": bytes_psum,
-            "ws_inkernel": bytes_ws,
-            "os": bytes_os,
-            "ws_psum_over_inkernel": round(bytes_psum / bytes_ws, 3),
-        },
     }
+    fr = out["fold_reuse"]
+    print(f"{model}_micro,width={width},img={img},"
+          f"fused_per_image_s={out['latency']['pallas_fused_per_img_s']},"
+          f"fused_speedup={out['latency']['fused_speedup']}x,"
+          f"schedules={fr['distinct_schedules']}/{fr['conv_layers']},"
+          f"hit_rate={fr['hit_rate']}")
+    return out
+
+
+def bench_summary(width: float = 0.0625, img: int = 32, batch: int = 2
+                  ) -> dict:
+    """Machine-readable micro-bench for CI perf tracking (BENCH_vgg.json):
+    the generic ``model_micro`` sections for vgg16 plus the full-size
+    VGG-16 bytes-moved model (PR-1 psum WS vs in-kernel WS).
+
+    Interpreter-mode sized: the numbers track the *trajectory* of the
+    engine hot path per PR, not absolute hardware performance.
+    """
+    from benchmarks.kernel_bench import dataflow_traffic
+
+    out = model_micro("vgg16", width=width, img=img, batch=batch)
+    bytes_psum = bytes_ws = bytes_os = 0
+    for _, cv in vgg16_conv_layers():
+        tm = dataflow_traffic(cv)
+        bytes_psum += tm["weight_stationary_psum"]
+        bytes_ws += tm["weight_stationary"]
+        bytes_os += tm["output_stationary"]
+    out["bytes_moved_model_fullsize"] = {
+        "ws_psum_pr1": bytes_psum,
+        "ws_inkernel": bytes_ws,
+        "os": bytes_os,
+        "ws_psum_over_inkernel": round(bytes_psum / bytes_ws, 3),
+    }
+    return out
 
 
 def main(csv=False):
@@ -319,6 +344,7 @@ def main(csv=False):
     measured()
     measured_fused()
     measured_tuned()
+    model_micro("resnet18")    # the second registered model, same lowering
     return u64_min
 
 

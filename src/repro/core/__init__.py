@@ -10,12 +10,14 @@ from repro.core.mapping import (ConvBlockPlan, MappingPlan, SpatialMap,
 from repro.core.perfmodel import (LayerPerf, MavecConfig, kips, layer_perf,
                                   reuse_metrics, t_ops_cycles)
 from repro.core.simulator import execute_conv_by_folds, simulate_cycles
-# engine last: it builds on mapping/perfmodel (kernel imports are lazy)
+from repro.core.graph import Node, StreamGraph, as_graph, fuse_graph
+# engine last: it builds on mapping/perfmodel/graph (kernel imports are lazy)
 from repro.core.engine import (CompiledNetwork, ConvSchedule, ScheduleCache,
                                ScheduleKey, compile_network, dataflow_costs,
                                resolve_execution, select_dataflow)
 
 __all__ = [
+    "Node", "StreamGraph", "as_graph", "fuse_graph",
     "AttnLoopNest", "ConvLoopNest", "GemmLoopNest", "synthetic_suite",
     "vgg16_conv_layers", "FoldingPlan", "PEArray", "decompose",
     "ConvBlockPlan", "MappingPlan", "SpatialMap", "TemporalMap",

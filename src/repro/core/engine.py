@@ -1,18 +1,20 @@
-"""Cached fold-schedule execution engine (DESIGN.md §4).
+"""Cached fold-schedule execution engine (DESIGN.md §4, §7).
 
 The paper compiles the 7-D loop nest into a *static* fold schedule once and
-then streams data through it; the headline VGG-16 numbers (>90% PE
-utilization, 12.7 KIPS end-to-end) rest on the observation that a network's
-conv layers collapse to a handful of distinct loop-nest geometries whose
+then streams data through it; its headline end-to-end numbers (>90% PE
+utilization, 12.7 KIPS) rest on the observation that a network's conv
+layers collapse to a handful of distinct loop-nest geometries whose
 schedules can be reused ("fold reuse").  This module is the software
-analogue of that compile-once discipline:
+analogue of that compile-once discipline — deliberately model-agnostic:
+models describe themselves as streaming graphs (``core/graph.py``) and the
+engine knows nothing about any particular network.
 
 * ``ScheduleKey`` canonicalizes a ``ConvLoopNest`` to its *filter-fold
   geometry* ``(N_F, C, R, S, stride, dilation)``.  The key deliberately
   excludes the spatial extents (X, Y, and the batch N): the Filter Fold —
   the weight block resident in VMEM — depends only on the filter tensor,
   while the Image Folds merely stream more or fewer positions through it.
-  VGG-16's 13 conv layers therefore collapse to 8 distinct keys.
+  A deep trunk's conv layers therefore collapse to a few distinct keys.
 
 * ``ConvSchedule`` is one cached schedule: the ``ConvBlockPlan`` solved
   once per key, plus the dataflow (``weight_stationary`` vs
@@ -23,8 +25,8 @@ analogue of that compile-once discipline:
   paper's fold-reuse metric, and the partially-applied Pallas kernels are
   memoized per (key, interpret) so repeated layers share one closure.
 
-* ``compile_network`` walks a conv model spec (``models/vgg.py``'s
-  ``VGG_LAYERS`` or any spec in the same shape), builds the whole-network
+* ``compile_network`` lowers a ``StreamGraph`` (or a legacy conv-spec
+  sequence) through one shared ``ScheduleCache``, builds the whole-network
   static schedule up front, and returns a jit-compiled end-to-end forward
   with the schedule baked in.
 
@@ -41,12 +43,13 @@ import json
 import math
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.epilogue import Epilogue
+from repro.core.epilogue import (Epilogue, epilogue_out_hw, maxpool2x2)
+from repro.core.graph import GraphError, StreamGraph, as_graph, fuse_graph
 from repro.core.loopnest import ConvLoopNest
 from repro.core.mapping import (WS_ACC_BYTES_LIMIT, ConvBlockPlan,
                                 conv_working_set, plan_conv_blocks)
@@ -67,8 +70,6 @@ __all__ = [
     "autotune_schedule",
     "pallas_interpret_default",
     "resolve_execution",
-    "maxpool2",
-    "vgg_head",
     "CompiledNetwork",
     "compile_network",
     "BucketCompiler",
@@ -199,8 +200,8 @@ def dataflow_costs(cv: ConvLoopNest, plan: ConvBlockPlan,
     as measured ratios of only 0.5-1.1x, because XLA's host-side psum
     reduce is nearly free on CPU while the in-kernel reduction pays per-
     grid-step ``pl.when`` overhead.  At the *network* level the fused
-    in-kernel path is what wins on this backend (fig9_vgg: ~1.2x per
-    image, fused vs unfused pallas engine).  Consequently the absolute
+    in-kernel path is what wins on this backend (benchmarks/fig9: ~1.2x
+    per image, fused vs unfused pallas engine).  Consequently the absolute
     ``offchip_gbps``/``freq_ghz`` constants are kept at the paper's §V.A
     values — they model the target accelerator, not this CI host — and
     this function's ranking is treated as the *no-tuning default only*:
@@ -295,30 +296,34 @@ def measure_schedule_ms(cv: ConvLoopNest, plan: ConvBlockPlan, dataflow: str,
                         epilogue: Optional[Epilogue] = None) -> float:
     """Median-of-``reps`` wall time (ms) of one fold-kernel run on-device.
 
-    Synthesizes the layer's tensors, jits the kernel with the candidate
-    plan/dataflow (and, when supplied, the deployment ``epilogue``, so the
-    timed kernel — including its pool-driven even-P-block normalization —
-    is the one that will actually execute), runs ``warmup`` throwaway
-    calls, then times ``reps`` calls with ``block_until_ready``.
+    Synthesizes the layer's tensors — including a shortcut tensor when the
+    deployment epilogue fuses a residual add — and jits the kernel with
+    the candidate plan/dataflow (and, when supplied, the ``epilogue``, so
+    the timed kernel — including its pool-driven even-P-block
+    normalization and the resident shortcut's VMEM footprint — is the one
+    that will actually execute), runs ``warmup`` throwaway calls, then
+    times ``reps`` calls with ``block_until_ready``.
     """
     from repro.kernels.conv2d_ws import conv2d_folded
     if interpret is None:
         interpret = pallas_interpret_default()
-    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    kx, kw, kr = jax.random.split(jax.random.PRNGKey(0), 3)
     x = jax.random.normal(
         kx, (cv.n, cv.c, cv.padded_x, cv.padded_y), jnp.float32)
     w = jax.random.normal(kw, (cv.nf, cv.c, cv.r, cv.s), jnp.float32)
     bias = (jnp.zeros((cv.nf,), jnp.float32)
             if epilogue is not None and epilogue.bias else None)
+    residual = (jax.random.normal(kr, (cv.n, cv.nf, cv.p, cv.q), jnp.float32)
+                if epilogue is not None and epilogue.residual else None)
     fn = jax.jit(functools.partial(conv2d_folded, stride=cv.stride,
                                    plan=plan, dataflow=dataflow,
                                    interpret=interpret, epilogue=epilogue))
     for _ in range(max(warmup, 1)):
-        fn(x, w, bias=bias).block_until_ready()
+        fn(x, w, bias=bias, residual=residual).block_until_ready()
     ts = []
     for _ in range(max(reps, 1)):
         t0 = time.perf_counter()
-        fn(x, w, bias=bias).block_until_ready()
+        fn(x, w, bias=bias, residual=residual).block_until_ready()
         ts.append((time.perf_counter() - t0) * 1e3)
     ts.sort()
     return ts[len(ts) // 2]
@@ -494,7 +499,7 @@ class ScheduleCache:
 
         Scope of the measured guarantee: candidates are timed with the
         *first-seen* layer's ``epilogue``.  A later same-key layer with a
-        different fused epilogue (e.g. the pre-pool VGG layer) reuses the
+        different fused epilogue (e.g. a pre-pool trunk layer) reuses the
         winner's block geometry without re-measuring — the epilogue only
         changes the flush, not the fold geometry the race ranks."""
         key = ScheduleKey.from_loopnest(cv)
@@ -633,35 +638,8 @@ class ScheduleCache:
 
 
 # --------------------------------------------------------------------------
-# Whole-network compilation
+# Whole-network compilation: StreamGraph lowering
 # --------------------------------------------------------------------------
-
-def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
-    """2x2/2 max-pool on NCHW."""
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
-
-
-def vgg_head(params: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
-    """Flatten + the 3-layer fc classifier head (shared with models/vgg)."""
-    n = x.shape[0]
-    x = x.reshape(n, -1)
-    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
-    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
-    return x @ params["fc3"]["w"] + params["fc3"]["b"]
-
-
-def _conv_entry(entry) -> Tuple[str, int, int]:
-    """Normalize a conv spec entry to (name, stride, pad).
-
-    Accepted: ("name", cin, cout) — 3x3 stride-1 pad-1 (the VGG idiom) —
-    or ("name", cin, cout, stride, pad).
-    """
-    name = entry[0]
-    if len(entry) >= 5:
-        return name, int(entry[3]), int(entry[4])
-    return name, 1, 1
-
 
 @dataclasses.dataclass
 class CompiledNetwork:
@@ -672,13 +650,14 @@ class CompiledNetwork:
     (possibly shared) cache is mutated or replanned afterwards.
     """
     apply: Callable[[Dict[str, Any], jnp.ndarray], jnp.ndarray]
-    layer_schedules: Tuple[Tuple[str, ConvSchedule], ...]  # per conv layer
+    layer_schedules: Tuple[Tuple[str, ConvSchedule], ...]  # per conv node
     build_stats: CacheStats        # cache activity during this compile only
     cache: ScheduleCache
     mode: str                # "pallas" | "reference"
     interpret: bool
     fused: bool = False      # epilogues flushed in-kernel (pallas mode)
     autotuned: bool = False  # schedules are measured winners
+    graph: Optional[StreamGraph] = None   # the graph actually lowered
 
     def __call__(self, params: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
         return self.apply(params, x)
@@ -714,7 +693,7 @@ class CompiledNetwork:
 
 
 def compile_network(params: Dict[str, Any],
-                    layers: Sequence,
+                    graph,
                     input_shape: Tuple[int, int, int, int],
                     *,
                     policy: str = "auto",
@@ -727,24 +706,37 @@ def compile_network(params: Dict[str, Any],
                     autotune_reps: int = 3,
                     autotune_timer: Optional[Callable] = None
                     ) -> CompiledNetwork:
-    """Compile a conv network spec into a static fold schedule + forward.
+    """Lower a streaming graph into a static fold schedule + jitted forward.
 
-    ``layers`` entries: ``"M"`` (2x2 max-pool) or ``(name, cin, cout[,
-    stride, pad])`` conv blocks whose weights live at ``params[name]["w"]``
-    (OIHW) with bias ``params[name]["b"]``; every conv is followed by a
-    ReLU, matching ``models/vgg.py``.  ``input_shape`` is NCHW.
+    ``graph`` is a ``core/graph.py:StreamGraph`` (any registered model
+    exports one) or, for backward compatibility, a legacy conv-spec
+    sequence converted by ``StreamGraph.from_conv_spec`` — note the
+    legacy spec lowers the conv *trunk* only: classifier heads are graph
+    nodes (see the model ``to_graph`` exporters) or an explicit ``head``
+    callable, and the old implicit fc-head default is gone.  Conv/dense
+    weights live at ``params[node.param]["w"]`` (OIHW / (in, out)) with
+    biases at ``["b"]``.  ``input_shape`` is NCHW.
 
-    All schedules are built eagerly here — the returned forward never
-    plans; its trace just binds the cached kernels.  ``head`` post-processes
-    the trunk output (default: the VGG fc head when ``params`` has one,
-    identity otherwise).
+    All schedules are built eagerly here through the shared
+    ``ScheduleCache`` — the returned forward never plans; its trace just
+    binds the cached kernels.  ``head``, when given, post-processes the
+    graph output (models usually express their classifier head as
+    flatten/dense graph nodes instead).
 
-    ``fuse_epilogues`` (pallas mode): each conv layer's bias+ReLU — and,
-    when the next spec entry is ``"M"``, the 2x2 max-pool — flush inside
-    the conv's ``pallas_call`` (``core/epilogue.py``), so a VGG conv block
-    is exactly one kernel launch and the pre-activation tensor never
-    round-trips through HBM.  Reference mode keeps the separate XLA ops
-    (XLA fuses them itself).
+    ``fuse_epilogues`` (pallas mode): the graph is first run through the
+    fusion pass (``core/graph.py:fuse_graph``), so each conv's
+    bias / residual-add / ReLU / 2x2-max-pool chain flushes inside the
+    conv's ``pallas_call`` (``core/epilogue.py``) — one kernel launch per
+    conv block, the pre-activation tensor never round-trips through HBM,
+    and a residual block's shortcut add costs no extra kernel.  Reference
+    mode keeps the separate XLA ops (XLA fuses them itself).  A fused
+    pool on an output too small to pool in-kernel (P or Q < 2) is demoted
+    back to a standalone op at lowering time.  Epilogues already present
+    on the *incoming* graph's conv nodes (a caller-supplied pre-fused
+    graph) are graph semantics — honored in every mode, lowered through
+    the XLA conv + reference epilogue chain when the fold kernels don't
+    run; ``fuse_epilogues`` only controls whether *this* compile runs the
+    fusion pass.
 
     ``autotune=True`` replaces the analytical dataflow ranking with
     measured timings (``autotune_for``): pay-once per ``ScheduleKey``, and
@@ -755,83 +747,155 @@ def compile_network(params: Dict[str, Any],
     # must still be used, so its stats/schedules reach the caller
     cache = cache if cache is not None else ScheduleCache()
     mode, interpret = resolve_execution(policy)
-    n, chan, h, w_ = input_shape
     stats_before = dataclasses.replace(cache.stats)
     if autotune and tuning_path and os.path.exists(tuning_path):
         cache.load_tuning(tuning_path)
     fused = fuse_epilogues and mode == "pallas"
+    g = fuse_graph(as_graph(graph)) if fused else as_graph(graph)
 
+    # -- shape-inferring walk: one step per node, schedules built eagerly --
+    shapes: Dict[str, Tuple[int, ...]] = {g.input: tuple(input_shape)}
     layer_schedules: List[Tuple[str, ConvSchedule]] = []
-    plan_steps: List[Tuple[str, object]] = []   # ("pool", None)|("conv", ...)
-    entries = list(layers)
-    i = 0
-    while i < len(entries):
-        entry = entries[i]
-        i += 1
-        if entry == "M":
-            plan_steps.append(("pool", None))
-            h, w_ = h // 2, w_ // 2
-            continue
-        name, stride, pad = _conv_entry(entry)
-        wshape = params[name]["w"].shape          # (NF, C, R, S)
-        nf, cin, r, s = (int(d) for d in wshape)
-        if cin != chan:
-            raise ValueError(f"{name}: weights expect {cin} input channels, "
-                             f"trunk carries {chan}")
-        cv = ConvLoopNest(n=n, nf=nf, c=cin, r=r, s=s, x=h, y=w_,
-                          stride=stride, pad=pad)
-        epi = None
-        if fused:
-            pool = (i < len(entries) and entries[i] == "M"
-                    and cv.p >= 2 and cv.q >= 2)
-            epi = Epilogue(bias=True, relu=True,
-                           pool="max2" if pool else None)
-        if autotune:
-            # measurements always run the fold kernels under the backend's
-            # own interpret policy (reference mode's interpret=False would
-            # ask for real Pallas lowering off-TPU), with the deployment
-            # epilogue baked in so the timed kernel is the executed one
-            sched = cache.autotune_for(
-                cv, reps=autotune_reps,
-                interpret=interpret if mode == "pallas" else None,
-                epilogue=epi, timer=autotune_timer)
-        else:
-            sched = cache.schedule_for(cv)
-        layer_schedules.append((name, sched))
-        h, w_, chan = cv.p, cv.q, nf
-        if epi is not None and epi.pool:
-            i += 1                                # pool fused into the conv
-            h, w_ = h // 2, w_ // 2
-        plan_steps.append(("conv", (name, stride, pad, sched, epi)))
+    plan_steps: List[Tuple] = []   # (op, out, in_names, static payload)
 
-    if head is None:
-        head = vgg_head if "fc1" in params else (lambda p, x: x)
+    def _need4d(nd, shape):
+        if len(shape) != 4:
+            raise GraphError(f"{nd.name}: {nd.op} expects an NCHW tensor, "
+                             f"got shape {shape}")
+
+    for nd in g.nodes:
+        src = nd.inputs[0]
+        s_in = shapes[src]
+        if nd.op == "conv":
+            _need4d(nd, s_in)
+            n_, chan, h, w_ = s_in
+            wshape = params[nd.param]["w"].shape          # (NF, C, R, S)
+            nf, cin, r, s = (int(d) for d in wshape)
+            if cin != chan:
+                raise GraphError(
+                    f"{nd.name}: weights expect {cin} input channels, "
+                    f"trunk carries {chan}")
+            cv = ConvLoopNest(n=n_, nf=nf, c=cin, r=r, s=s, x=h, y=w_,
+                              stride=nd.stride, pad=nd.pad)
+            epi, demoted_pool = nd.epilogue, False
+            if epi is not None and epi.pool and (cv.p < 2 or cv.q < 2):
+                # output too small to pool in-kernel: demote to a
+                # standalone op after the conv (same numerics)
+                epi = dataclasses.replace(epi, pool=None)
+                demoted_pool = True
+            if epi is not None and epi.residual:
+                if nd.residual is None:
+                    raise GraphError(
+                        f"{nd.name}: Epilogue(residual=True) needs the "
+                        "node's residual skip-edge input set")
+                want = (n_, nf, cv.p, cv.q)
+                got = shapes[nd.residual]
+                if tuple(got) != want:
+                    raise GraphError(
+                        f"{nd.name}: fused shortcut {nd.residual!r} has "
+                        f"shape {got}, conv output is {want}")
+            if autotune:
+                # measurements always run the fold kernels under the
+                # backend's own interpret policy (reference mode's
+                # interpret=False would ask for real Pallas lowering
+                # off-TPU), with the deployment epilogue baked in so the
+                # timed kernel is the executed one
+                sched = cache.autotune_for(
+                    cv, reps=autotune_reps,
+                    interpret=interpret if mode == "pallas" else None,
+                    epilogue=epi, timer=autotune_timer)
+            else:
+                sched = cache.schedule_for(cv)
+            layer_schedules.append((nd.name, sched))
+            po, qo = epilogue_out_hw(nd.epilogue, cv.p, cv.q)
+            shapes[nd.name] = (n_, nf, po, qo)
+            plan_steps.append(("conv", nd.name, nd.all_inputs(),
+                               (sched, epi, nd.stride, nd.pad, nd.param,
+                                demoted_pool)))
+        elif nd.op == "bias":
+            _need4d(nd, s_in)
+            shapes[nd.name] = s_in
+            plan_steps.append(("bias", nd.name, nd.inputs, nd.param))
+        elif nd.op == "relu":
+            shapes[nd.name] = s_in
+            plan_steps.append(("relu", nd.name, nd.inputs, None))
+        elif nd.op == "maxpool2":
+            _need4d(nd, s_in)
+            n_, chan, h, w_ = s_in
+            shapes[nd.name] = (n_, chan, h // 2, w_ // 2)
+            plan_steps.append(("maxpool2", nd.name, nd.inputs, None))
+        elif nd.op == "residual_add":
+            a, b = (shapes[i] for i in nd.inputs)
+            if tuple(a) != tuple(b):
+                raise GraphError(f"{nd.name}: residual_add operands differ "
+                                 f"in shape: {a} vs {b}")
+            shapes[nd.name] = a
+            plan_steps.append(("residual_add", nd.name, nd.inputs, None))
+        elif nd.op == "flatten":
+            shapes[nd.name] = (s_in[0], int(math.prod(s_in[1:])))
+            plan_steps.append(("flatten", nd.name, nd.inputs, None))
+        elif nd.op == "dense":
+            din, dout = (int(d) for d in params[nd.param]["w"].shape)
+            if len(s_in) != 2 or s_in[1] != din:
+                raise GraphError(f"{nd.name}: dense expects (N, {din}), "
+                                 f"got {s_in}")
+            shapes[nd.name] = (s_in[0], dout)
+            plan_steps.append(("dense", nd.name, nd.inputs, nd.param))
+        else:  # pragma: no cover — construction validates ops
+            raise GraphError(f"{nd.name}: cannot lower op {nd.op!r}")
 
     steps = tuple(plan_steps)
+    out_name = g.output
 
     def forward(p: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
         # Schedules are baked in: tracing binds the cached kernels and
         # never re-plans (no cache lookups on the hot path).
         from repro.kernels.ops import conv2d, conv2d_fused
-        for kind, info in steps:
-            if kind == "pool":
-                x = maxpool2(x)
-                continue
-            name, stride, pad, sched, epi = info
-            w = p[name]["w"]
-            b = p[name]["b"]
-            if epi is not None:                   # fused pallas epilogue
-                x = conv2d_fused(x, w, b, stride=stride, pad=pad,
-                                 epilogue=epi, impl=sched.impl(),
-                                 plan=sched.plan, interpret=interpret)
-                continue
-            if mode == "reference":
-                y = conv2d(x, w, stride=stride, pad=pad, impl="direct")
-            else:
-                y = conv2d(x, w, stride=stride, pad=pad, impl=sched.impl(),
-                           plan=sched.plan, interpret=interpret)
-            x = jax.nn.relu(y + b[None, :, None, None])
-        return head(p, x)
+        env: Dict[str, jnp.ndarray] = {g.input: x}
+        for op, out, ins, info in steps:
+            if op == "conv":
+                sched, epi, stride, pad, pname, demoted_pool = info
+                xin, w = env[ins[0]], p[pname]["w"]
+                if epi is not None:
+                    # an epilogue on a conv node is graph semantics and is
+                    # honored in every mode; in pallas mode it flushes
+                    # in-kernel, in reference mode (a caller-supplied
+                    # pre-fused graph — this compile never fuses there) it
+                    # lowers through the XLA conv + reference epilogue
+                    b = p[pname]["b"] if epi.bias else None
+                    res = env[ins[1]] if epi.residual else None
+                    if mode == "reference":
+                        y = conv2d_fused(xin, w, b, stride=stride, pad=pad,
+                                         epilogue=epi, impl="direct",
+                                         residual=res)
+                    else:
+                        y = conv2d_fused(xin, w, b, stride=stride, pad=pad,
+                                         epilogue=epi, impl=sched.impl(),
+                                         plan=sched.plan,
+                                         interpret=interpret, residual=res)
+                elif mode == "reference":
+                    y = conv2d(xin, w, stride=stride, pad=pad, impl="direct")
+                else:
+                    y = conv2d(xin, w, stride=stride, pad=pad,
+                               impl=sched.impl(), plan=sched.plan,
+                               interpret=interpret)
+                env[out] = maxpool2x2(y) if demoted_pool else y
+            elif op == "bias":
+                env[out] = (env[ins[0]]
+                            + p[info]["b"][None, :, None, None])
+            elif op == "relu":
+                env[out] = jax.nn.relu(env[ins[0]])
+            elif op == "maxpool2":
+                env[out] = maxpool2x2(env[ins[0]])
+            elif op == "residual_add":
+                env[out] = env[ins[0]] + env[ins[1]]
+            elif op == "flatten":
+                v = env[ins[0]]
+                env[out] = v.reshape(v.shape[0], -1)
+            else:                                 # dense
+                env[out] = env[ins[0]] @ p[info]["w"] + p[info]["b"]
+        y = env[out_name]
+        return head(p, y) if head is not None else y
 
     if autotune and tuning_path:
         cache.save_tuning(tuning_path)
@@ -844,7 +908,7 @@ def compile_network(params: Dict[str, Any],
                            layer_schedules=tuple(layer_schedules),
                            build_stats=build_stats, cache=cache,
                            mode=mode, interpret=interpret,
-                           fused=fused, autotuned=autotune)
+                           fused=fused, autotuned=autotune, graph=g)
 
 
 # --------------------------------------------------------------------------
@@ -855,19 +919,20 @@ class BucketCompiler:
     """Memoized ``compile_network`` per batch width, one shared
     ``ScheduleCache``.
 
-    Continuous-batching serving pads request batches to a small set of
-    *bucket* widths so each width is one stable jitted forward.  Because
-    ``ScheduleKey`` deliberately excludes the batch axis (the batch only
-    changes how many image folds stream through a schedule), the first
-    bucket's compile populates every filter-fold schedule — measuring them
-    when ``autotune`` is set — and every later bucket compiles with 100%
-    schedule-cache hits: planning and tuning are pay-once across buckets,
-    only the XLA trace is per-bucket.  With ``tuning_path`` the measured
-    winners round-trip through one JSON shared by all buckets (and by
-    later sessions).
+    ``graph`` is any ``StreamGraph`` (or legacy conv-spec sequence) —
+    the compiler is model-agnostic.  Continuous-batching serving pads
+    request batches to a small set of *bucket* widths so each width is
+    one stable jitted forward.  Because ``ScheduleKey`` deliberately
+    excludes the batch axis (the batch only changes how many image folds
+    stream through a schedule), the first bucket's compile populates
+    every filter-fold schedule — measuring them when ``autotune`` is set —
+    and every later bucket compiles with 100% schedule-cache hits:
+    planning and tuning are pay-once across buckets, only the XLA trace
+    is per-bucket.  With ``tuning_path`` the measured winners round-trip
+    through one JSON shared by all buckets (and by later sessions).
     """
 
-    def __init__(self, params: Dict[str, Any], layers: Sequence,
+    def __init__(self, params: Dict[str, Any], graph,
                  img: int, *, chan: int = 3, policy: str = "auto",
                  cache: Optional[ScheduleCache] = None,
                  head: Optional[Callable] = None, jit: bool = True,
@@ -876,7 +941,7 @@ class BucketCompiler:
                  autotune_reps: int = 3,
                  autotune_timer: Optional[Callable] = None):
         self.params = params
-        self.layers = tuple(layers)
+        self.graph = as_graph(graph)
         self.img = int(img)
         self.chan = int(chan)
         self.policy = policy
@@ -907,7 +972,7 @@ class BucketCompiler:
         net = self._nets.get(batch)
         if net is None:
             net = compile_network(
-                self.params, self.layers,
+                self.params, self.graph,
                 (batch, self.chan, self.img, self.img),
                 policy=self.policy, cache=self.cache, head=self.head,
                 jit=self.jit, fuse_epilogues=self.fuse_epilogues,

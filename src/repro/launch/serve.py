@@ -4,11 +4,15 @@ vision engine (``serve/vision.py``).
 
     python -m repro.launch.serve --arch qwen3-4b --requests 8
     python -m repro.launch.serve --vision --requests 32 --backend interpret
+    python -m repro.launch.serve --vision --model resnet18 --requests 16
 
 The vision path serves a deterministic mixed-size request stream through
-the bucketed ``CompiledNetwork`` forwards and merges its measured metrics
-(KIPS, latency percentiles, slot occupancy, fold-reuse rates) into
-``BENCH_vgg.json`` — the CI serving smoke job.
+the bucketed ``CompiledNetwork`` forwards of any registered conv model
+(``models/zoo.py``, ``--model``) and merges its measured metrics (KIPS,
+latency percentiles, slot occupancy, fold-reuse rates) into
+``BENCH_vgg.json``: per-model under ``serving_by_model.<name>``, with the
+legacy flat ``serving`` section still tracking vgg16 (the original CI
+smoke contract) so older tooling keeps working.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import argparse
 import json
 import os
 import time
+from typing import Optional
 
 import jax
 import numpy as np
@@ -29,10 +34,16 @@ VISION_POLICIES = {"auto": "auto", "interpret": "pallas",
                    "reference": "reference"}
 
 
-def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json") -> None:
+def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json",
+                     model: Optional[str] = None) -> None:
     """Merge the serving section into the perf snapshot, preserving the
     micro-bench sections ``benchmarks/run.py`` wrote (and tolerating a
-    missing or corrupt file — same discipline as the tuning cache)."""
+    missing or corrupt file — same discipline as the tuning cache).
+
+    With ``model`` the metrics land under ``serving_by_model.<model>`` so
+    each model's snapshot survives the others' runs; the legacy flat
+    ``serving`` section is only (re)written for vgg16 — or when no model
+    is named — never clobbered by another model's serve."""
     data = {}
     if os.path.exists(path):
         try:
@@ -42,10 +53,18 @@ def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json") -> None:
             data = {}
     if not isinstance(data, dict):
         data = {}
-    data["serving"] = summary
+    if model is not None:
+        by_model = data.get("serving_by_model")
+        if not isinstance(by_model, dict):
+            by_model = {}
+        by_model[model] = summary
+        data["serving_by_model"] = by_model
+    if model is None or model == "vgg16":
+        data["serving"] = summary
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
-    print(f"# wrote serving metrics into {path}")
+    key = f"serving_by_model.{model}" if model is not None else "serving"
+    print(f"# wrote serving metrics into {path} under {key!r}")
 
 
 def vision_main(args) -> dict:
@@ -53,15 +72,15 @@ def vision_main(args) -> dict:
     from repro.serve.vision import serving_summary
     mesh = None
     if args.mesh:
-        data, model = (int(t) for t in args.mesh.lower().split("x"))
-        mesh = make_local_mesh(data, model)
+        data, model_par = (int(t) for t in args.mesh.lower().split("x"))
+        mesh = make_local_mesh(data, model_par)
     buckets = tuple(int(b) for b in args.buckets.split(","))
     summary = serving_summary(
-        requests=args.requests, img=args.img, width_mult=args.width,
-        policy=VISION_POLICIES[args.backend], buckets=buckets, mesh=mesh,
-        seed=args.seed, autotune=args.autotune,
+        args.model, requests=args.requests, img=args.img,
+        width_mult=args.width, policy=VISION_POLICIES[args.backend],
+        buckets=buckets, mesh=mesh, seed=args.seed, autotune=args.autotune,
         tuning_path=args.tuning_path or None, verbose=True)
-    merge_bench_json(summary, args.bench_json)
+    merge_bench_json(summary, args.bench_json, model=args.model)
     return summary
 
 
@@ -91,6 +110,7 @@ def token_main(args) -> None:
 
 
 def main():
+    from repro.models.zoo import conv_model_names
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
     # token serving
@@ -104,6 +124,9 @@ def main():
     ap.add_argument("--vision", action="store_true",
                     help="serve an image stream through the compiled "
                          "fold-schedule engine instead of token decode")
+    ap.add_argument("--model", default="vgg16",
+                    choices=conv_model_names(),
+                    help="registered conv model to serve (models/zoo.py)")
     ap.add_argument("--backend", choices=sorted(VISION_POLICIES),
                     default="auto",
                     help="vision execution: auto (backend policy), "
@@ -111,7 +134,7 @@ def main():
                          "off-TPU), reference")
     ap.add_argument("--img", type=int, default=32)
     ap.add_argument("--width", type=float, default=0.0625,
-                    help="VGG width multiplier")
+                    help="model width multiplier")
     ap.add_argument("--buckets", default="1,2,4,8",
                     help="comma-separated batch bucket widths")
     ap.add_argument("--mesh", default="",

@@ -5,27 +5,29 @@ Every conv layer runs through ``repro.kernels.ops.conv2d`` so the whole
 network exercises the paper's Filter-Fold/Image-Fold dataflow (impl
 selectable: fold_ws / fold_os / fold_auto Pallas, im2col GEMM baseline,
 direct).  ``forward`` accepts a ``ScheduleCache`` so repeated loop-nest
-geometries reuse one fold schedule; ``compile_forward`` goes further and
-bakes the whole-network static schedule into a jitted forward
-(``core/engine.py``, DESIGN.md §4).
+geometries reuse one fold schedule; ``to_graph`` exports the network as a
+``core/graph.py:StreamGraph`` — the model-agnostic streaming IR — and
+``compile_forward`` lowers that graph into a jitted whole-network static
+schedule (``core/engine.py``, DESIGN.md §4/§7).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine import (BucketCompiler, CompiledNetwork,
-                               ScheduleCache, compile_network, maxpool2,
-                               vgg_head)
+                               ScheduleCache)
+from repro.core.epilogue import maxpool2x2
+from repro.core.graph import StreamGraph
 from repro.core.loopnest import ConvLoopNest
 from repro.kernels.ops import conv2d
 
 from repro.models.common import Axes, TreeMaker
 
-__all__ = ["VGG_LAYERS", "init_params", "forward", "compile_forward",
-           "bucket_compiler", "n_classes"]
+__all__ = ["VGG_LAYERS", "init_params", "forward", "vgg_head", "to_graph",
+           "compile_forward", "bucket_compiler", "n_classes"]
 
 # (name, in_ch, out_ch) conv3x3 blocks; "M" = 2x2 maxpool (paper Table 2B)
 VGG_LAYERS: Tuple = (
@@ -71,6 +73,33 @@ def init_params(key: jax.Array, *, width_mult: float = 1.0,
     return p
 
 
+def vgg_head(params: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    """Flatten + the 3-layer fc classifier head (the callable form of the
+    flatten/dense tail ``to_graph`` expresses as graph nodes)."""
+    n = x.shape[0]
+    x = x.reshape(n, -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def to_graph(*, include_head: bool = True) -> StreamGraph:
+    """Export VGG-16 as a streaming graph (``core/graph.py``): the 13
+    conv/bias/relu blocks with their 5 pool stages, plus — with
+    ``include_head`` — the flatten + 3-layer fc classifier as graph
+    nodes, so the whole network lowers through ``compile_network`` with
+    no model-specific code in the engine."""
+    g = StreamGraph.from_conv_spec(VGG_LAYERS, name="vgg16")
+    if include_head:
+        g.flatten()
+        g.dense("fc1")
+        g.relu()
+        g.dense("fc2")
+        g.relu()
+        g.dense("fc3")
+    return g
+
+
 _FOLD_IMPLS = ("fold_ws", "fold_os", "fold_auto")
 
 
@@ -89,7 +118,7 @@ def forward(params: Dict[str, Any], x: jnp.ndarray,
     use_cache = cache is not None and impl in _FOLD_IMPLS
     for entry in VGG_LAYERS:
         if entry == "M":
-            x = maxpool2(x)
+            x = maxpool2x2(x)
             continue
         name = entry[0]
         w, b = params[name]["w"], params[name]["b"]
@@ -107,15 +136,10 @@ def forward(params: Dict[str, Any], x: jnp.ndarray,
     return vgg_head(params, x)
 
 
-def compile_forward(params: Dict[str, Any], *, img: int, batch: int = 1,
-                    policy: str = "auto",
-                    cache: Optional[ScheduleCache] = None,
-                    jit: bool = True,
-                    fuse_epilogues: bool = True,
-                    autotune: bool = False,
-                    tuning_path: Optional[str] = None,
+def compile_forward(params: Dict[str, Any], *, img: int,
                     **compile_kw) -> CompiledNetwork:
-    """Compile the whole VGG trunk+head into a static fold schedule.
+    """Compile the whole VGG trunk+head into a static fold schedule
+    through the shared graph lowering (``models/zoo.py:compile_forward``).
 
     Returns the engine's ``CompiledNetwork``: call it as ``net(params, x)``;
     ``net.fold_reuse()`` reports the schedule-cache hit rate (the paper's
@@ -127,18 +151,14 @@ def compile_forward(params: Dict[str, Any], *, img: int, batch: int = 1,
     measured timings instead of the analytical cost model, persisting the
     winners to ``tuning_path`` (JSON) so tuning is pay-once.
     """
-    return compile_network(params, VGG_LAYERS, (batch, 3, img, img),
-                           policy=policy, cache=cache, jit=jit,
-                           fuse_epilogues=fuse_epilogues, autotune=autotune,
-                           tuning_path=tuning_path, **compile_kw)
+    from repro.models import zoo
+    return zoo.compile_forward("vgg16", params, img=img, **compile_kw)
 
 
 def bucket_compiler(params: Dict[str, Any], *, img: int,
-                    policy: str = "auto",
-                    cache: Optional[ScheduleCache] = None,
                     **compile_kw) -> BucketCompiler:
     """The serving compile surface: one memoized ``compile_forward`` per
     batch-bucket width, all widths sharing one ``ScheduleCache`` (and one
     tuning JSON, when autotuning) — see ``serve/vision.py``."""
-    return BucketCompiler(params, VGG_LAYERS, img, policy=policy,
-                          cache=cache, **compile_kw)
+    from repro.models import zoo
+    return zoo.bucket_compiler("vgg16", params, img=img, **compile_kw)

@@ -19,9 +19,12 @@ steps:
   ``device_put`` (the ``data/pipeline.py`` idiom of keeping the host one
   step ahead of the device);
 * serving metrics — measured KIPS, p50/p95/p99 request latency, slot
-  occupancy, schedule-cache / fold-reuse hit rates — snapshot into
-  ``BENCH_vgg.json`` via ``benchmarks/run.py`` and
-  ``launch/serve.py --vision``.
+  occupancy, schedule-cache / fold-reuse hit rates — snapshot into the
+  bench JSON via ``benchmarks/run.py`` and ``launch/serve.py --vision``.
+
+The engine is model-agnostic: it serves any ``StreamGraph`` registered in
+``models/zoo.py`` (``serving_summary`` looks models up by name), and the
+per-conv fold schedules come from the shared graph lowering.
 """
 from __future__ import annotations
 
@@ -103,7 +106,7 @@ class VisionEngine:
     runs the same jitted forwards data+model parallel.
     """
 
-    def __init__(self, params: Dict[str, Any], layers: Sequence, *,
+    def __init__(self, params: Dict[str, Any], graph, *,
                  img: int, chan: int = 3, policy: str = "auto",
                  buckets: Sequence[int] = (1, 2, 4, 8),
                  mesh=None, data_axis: str = "data",
@@ -136,7 +139,7 @@ class VisionEngine:
         self.params = params
         self.batcher = ImageBatcher(bucket_policy, img, chan)
         self.compiler = BucketCompiler(
-            params, layers, img, chan=chan, policy=policy, cache=cache,
+            params, graph, img, chan=chan, policy=policy, cache=cache,
             head=head, fuse_epilogues=fuse_epilogues, autotune=autotune,
             tuning_path=tuning_path, autotune_timer=autotune_timer)
         self.metrics = ServingMetrics()
@@ -247,20 +250,21 @@ class VisionEngine:
         return d
 
 
-def serving_summary(*, requests: int = 32, img: int = 32,
+def serving_summary(model: str, *, requests: int = 32, img: int = 32,
                     width_mult: float = 0.0625, classes: int = 10,
                     policy: str = "auto", buckets: Sequence[int] = (1, 2, 4, 8),
                     mesh=None, seed: int = 0, autotune: bool = False,
                     tuning_path: Optional[str] = None,
                     verbose: bool = False) -> dict:
     """Serve a deterministic mixed-size random request stream through a
-    reduced VGG-16 and return the metrics dict (the ``serving`` section of
-    ``BENCH_vgg.json``).  Shared by ``launch/serve.py --vision`` and
-    ``benchmarks/run.py``."""
-    from repro.models import vgg
-    params = vgg.init_params(jax.random.PRNGKey(0), width_mult=width_mult,
-                             img=img, classes=classes)
-    engine = VisionEngine(params, vgg.VGG_LAYERS, img=img, policy=policy,
+    reduced-width registered model (``models/zoo.py``) and return the
+    metrics dict (the per-model serving section of the bench JSON).
+    Shared by ``launch/serve.py --vision`` and ``benchmarks/run.py``."""
+    from repro.models.zoo import get_conv_model
+    spec = get_conv_model(model)
+    params = spec.init_params(jax.random.PRNGKey(0), width_mult=width_mult,
+                              img=img, classes=classes)
+    engine = VisionEngine(params, spec.to_graph(), img=img, policy=policy,
                           buckets=buckets, mesh=mesh, autotune=autotune,
                           tuning_path=tuning_path)
     engine.warmup()
@@ -272,7 +276,7 @@ def serving_summary(*, requests: int = 32, img: int = 32,
                       .astype(np.float32))
     engine.run()
     d = engine.metrics_dict()
-    d["workload"] = {"model": "vgg16", "width_mult": width_mult, "img": img,
+    d["workload"] = {"model": model, "width_mult": width_mult, "img": img,
                      "requests": int(requests), "policy": policy,
                      "seed": seed, "backend": jax.default_backend()}
     if verbose:

@@ -1,0 +1,295 @@
+"""Streaming-graph IR (DESIGN.md §7): construction/validation, the
+epilogue-fusion pass, legacy conv-spec conversion, and the graph-fusion
+invariance guarantee (fused vs unfused lowering bitwise-equal on both
+registered models)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import ScheduleCache, compile_network
+from repro.core.epilogue import Epilogue
+from repro.core.graph import (GraphError, StreamGraph, as_graph, fuse_graph,
+                              lower)
+
+
+# --------------------------------------------------------------------------
+# construction + validation
+# --------------------------------------------------------------------------
+
+def test_builder_chains_and_names():
+    g = StreamGraph("t")
+    g.conv("c1", param="c1")
+    b = g.bias()
+    r = g.relu()
+    assert b == "c1.bias" and r == "c1.bias.relu"
+    assert g.output == r and g.node("c1").param == "c1"
+    assert g.conv_names() == ["c1"]
+    # bias inherits the producing conv's param entry
+    assert g.node(b).param == "c1"
+
+
+def test_builder_rejects_malformed_graphs():
+    g = StreamGraph()
+    with pytest.raises(GraphError, match="not defined"):
+        g.conv("c1", src="nope")
+    g.conv("c1")
+    with pytest.raises(GraphError, match="duplicate"):
+        g.conv("c1", src="x")
+    with pytest.raises(GraphError, match="no param to inherit"):
+        StreamGraph().bias("b", src="x")
+    with pytest.raises(GraphError, match="unknown op"):
+        from repro.core.graph import Node
+        g._append(Node(name="z", op="avgpool", inputs=("c1",)))
+
+
+def test_residual_add_is_an_explicit_skip_edge():
+    g = StreamGraph()
+    g.conv("c1")
+    g.conv("c2")
+    g.residual_add("add", "c2", "c1")
+    g.relu("out")
+    cons = g.consumers()
+    assert [n.name for n in cons["c1"]] == ["c2", "add"]
+    assert g.output == "out"
+
+
+# --------------------------------------------------------------------------
+# the fusion pass
+# --------------------------------------------------------------------------
+
+def test_fuse_vgg_block_shapes():
+    from repro.models import vgg
+    fg = fuse_graph(vgg.to_graph())
+    convs = {nd.name: nd for nd in fg.nodes if nd.op == "conv"}
+    assert len(convs) == 13
+    pooled = {"conv1_2", "conv2_2", "conv3_3", "conv4_3", "conv5_3"}
+    for name, nd in convs.items():
+        want = Epilogue(bias=True, relu=True,
+                        pool="max2" if name in pooled else None)
+        assert nd.epilogue == want, name
+    # the head stays unfused: flatten + 3 dense + 2 relu
+    assert [nd.op for nd in fg.nodes if nd.op != "conv"] == \
+        ["flatten", "dense", "relu", "dense", "relu", "dense"]
+
+
+def test_fuse_resnet_block_residual_and_toposort():
+    from repro.models import resnet
+    fg = fuse_graph(resnet.to_graph())
+    assert all(nd.op == "conv" for nd in fg.nodes[:-2])
+    c2 = fg.node("s2b0_c2")
+    assert c2.epilogue == Epilogue(bias=True, relu=True, residual=True)
+    assert c2.residual == "s2b0_down"          # aliased through the bias
+    down = fg.node("s2b0_down")
+    assert down.epilogue == Epilogue(bias=True)
+    # identity-shortcut block: skip edge points at the previous block
+    assert fg.node("s1b1_c2").residual == "s1b0_c2"
+    # topological: every skip edge is defined before its consumer
+    seen = {fg.input}
+    for nd in fg.nodes:
+        assert all(src in seen for src in nd.all_inputs()), nd.name
+        seen.add(nd.name)
+    assert fg.output == "fc"
+
+
+def test_fuse_stops_at_multi_consumer_intermediates():
+    """A conv whose raw output is consumed twice cannot absorb anything —
+    the intermediate value must stay materialized."""
+    g = StreamGraph()
+    g.conv("c1")
+    g.bias()
+    g.relu()                       # c1 chain, but:
+    g.residual_add("add", "c1.bias.relu", "c1")   # raw c1 also consumed
+    fg = fuse_graph(g)
+    assert fg.node("c1").epilogue is None
+    assert {nd.op for nd in fg.nodes} == \
+        {"conv", "bias", "relu", "residual_add"}
+
+
+def test_fuse_never_pools_after_residual():
+    g = StreamGraph()
+    g.conv("c1")
+    g.bias()
+    g.residual_add("add", "c1.bias", "x")
+    g.maxpool2("pool")
+    fg = fuse_graph(g)
+    epi = fg.node("c1").epilogue
+    assert epi.residual and epi.pool is None    # pool stays standalone
+    assert any(nd.op == "maxpool2" for nd in fg.nodes)
+
+
+def test_fuse_respects_graph_output_value():
+    """Absorbing may include the output node itself, but never a consumer
+    of the output-valued tip (its exact value must survive)."""
+    g = StreamGraph()
+    g.conv("c1")
+    g.bias()
+    g.relu("out")
+    fg = fuse_graph(g)
+    assert fg.output == "c1" and len(fg.nodes) == 1   # chain ends at output
+    g2 = StreamGraph()
+    g2.conv("c1")
+    b = g2.bias()
+    g2.relu("r", src=b)            # the bias value feeds a consumer...
+    g2.output = b                  # ...and is also the graph output
+    fg2 = fuse_graph(g2)
+    assert fg2.node("c1").epilogue == Epilogue(bias=True)
+    assert fg2.output == "c1"      # alias keeps the output reference valid
+    assert any(nd.op == "relu" for nd in fg2.nodes)
+
+
+# --------------------------------------------------------------------------
+# legacy conv-spec conversion + lowering equivalence
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_conv():
+    from repro.models.common import DTypePolicy, TreeMaker
+    tm = TreeMaker("init", key=jax.random.PRNGKey(0),
+                   dtype_policy=DTypePolicy(param=jnp.float32,
+                                            compute=jnp.float32))
+    params = {"c1": {"w": tm.param((8, 3, 3, 3), (None,) * 4),
+                     "b": tm.param((8,), (None,), init="zeros")},
+              "c2": {"w": tm.param((8, 8, 3, 3), (None,) * 4),
+                     "b": tm.param((8,), (None,), init="zeros")}}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16, 16))
+    return params, x
+
+
+def test_legacy_spec_and_graph_lower_identically(tiny_conv):
+    params, x = tiny_conv
+    spec = (("c1", 3, 8), "M", ("c2", 8, 8))
+    g = as_graph(spec)
+    assert [nd.op for nd in g.nodes] == ["conv", "bias", "relu", "maxpool2",
+                                         "conv", "bias", "relu"]
+    cache = ScheduleCache()
+    net_spec = compile_network(params, spec, (2, 3, 16, 16),
+                               policy="pallas", cache=cache)
+    net_graph = compile_network(params, g, (2, 3, 16, 16),
+                                policy="pallas", cache=cache)
+    np.testing.assert_array_equal(np.asarray(net_spec(params, x)),
+                                  np.asarray(net_graph(params, x)))
+    assert lower(g, params, (2, 3, 16, 16), policy="pallas",
+                 cache=cache).layer_keys == net_graph.layer_keys
+
+
+def test_lowering_validates_shapes(tiny_conv):
+    params, _ = tiny_conv
+    g = StreamGraph()
+    g.conv("c1")
+    with pytest.raises(GraphError, match="input channels"):
+        compile_network(params, g, (2, 8, 16, 16), policy="reference")
+    g2 = StreamGraph()
+    g2.conv("c1")
+    g2.conv("c2")
+    g2.residual_add("add", "c2", "x")      # 3-channel input vs 8-filter out
+    with pytest.raises(GraphError, match="shape"):
+        compile_network(params, g2, (2, 3, 16, 16), policy="pallas")
+    # a hand-built fused conv whose epilogue wants a residual but whose
+    # skip edge was never set must fail as a named graph error
+    from repro.core.graph import Node
+    g3 = StreamGraph()
+    g3._append(Node(name="c1", op="conv", inputs=("x",), param="c1",
+                    epilogue=Epilogue(bias=True, residual=True, relu=True)))
+    with pytest.raises(GraphError, match="skip-edge"):
+        compile_network(params, g3, (2, 3, 16, 16), policy="pallas")
+
+
+def test_fused_pool_demotes_on_tiny_output(tiny_conv):
+    """An output too small to pool in-kernel is pooled by a standalone op
+    at lowering time — same numerics, no compile failure."""
+    params, _ = tiny_conv
+    spec = (("c1", 3, 8), "M")
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 3, 3, 3))
+    net = compile_network(params, spec, (1, 3, 3, 3), policy="pallas")
+    ref = compile_network(params, spec, (1, 3, 3, 3), policy="pallas",
+                          fuse_epilogues=False)
+    assert net.fused
+    np.testing.assert_array_equal(np.asarray(net(params, x)),
+                                  np.asarray(ref(params, x)))
+
+
+# --------------------------------------------------------------------------
+# graph-fusion invariance: fused vs unfused bitwise on both models
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["vgg16", "resnet18"])
+def test_fusion_invariance_bitwise(model):
+    """The fusion pass is a pure scheduling transform: the fused network
+    (epilogues flushed in-kernel) and the unfused one (separate XLA ops)
+    produce bitwise-identical outputs on every registered model."""
+    from repro.models.zoo import get_conv_model
+    spec = get_conv_model(model)
+    params = spec.init_params(jax.random.PRNGKey(0), width_mult=0.0625,
+                              img=32, classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32))
+    cache = ScheduleCache()
+    fused = compile_network(params, spec.to_graph(), (2, 3, 32, 32),
+                            policy="pallas", cache=cache)
+    unfused = compile_network(params, spec.to_graph(), (2, 3, 32, 32),
+                              policy="pallas", cache=cache,
+                              fuse_epilogues=False)
+    assert fused.fused and not unfused.fused
+    np.testing.assert_array_equal(np.asarray(fused(params, x)),
+                                  np.asarray(unfused(params, x)))
+
+
+def test_prefused_graph_honored_in_every_mode():
+    """Epilogues on an *incoming* graph's conv nodes are graph semantics:
+    a pre-fused graph lowered in reference mode (or with
+    fuse_epilogues=False) must produce the same numerics as fusing at
+    compile time — reference mode lowers the epilogue through the XLA
+    conv, never the fold kernels (regression: it asked for real Pallas
+    lowering off-TPU and crashed)."""
+    from repro.models import resnet
+    params = resnet.init_params(jax.random.PRNGKey(0), width_mult=0.0625,
+                                img=16, classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 16, 16))
+    prefused = fuse_graph(resnet.to_graph())
+    want = np.asarray(compile_network(params, resnet.to_graph(),
+                                      (1, 3, 16, 16), policy="pallas")
+                      (params, x))
+    ref = compile_network(params, prefused, (1, 3, 16, 16),
+                          policy="reference")
+    np.testing.assert_allclose(np.asarray(ref(params, x)), want,
+                               rtol=1e-3, atol=1e-3)
+    unfused_flag = compile_network(params, prefused, (1, 3, 16, 16),
+                                   policy="pallas", fuse_epilogues=False)
+    np.testing.assert_array_equal(np.asarray(unfused_flag(params, x)), want)
+
+
+def test_fuse_extends_preexisting_epilogues(tiny_conv):
+    """Fusing a *partially* pre-fused graph extends each conv's existing
+    epilogue instead of replacing it (regression: a conv carrying
+    Epilogue(bias=True) followed by a standalone relu came out with the
+    bias silently dropped), and fusion is idempotent."""
+    from repro.core.graph import Node
+    params, x = tiny_conv
+    g = StreamGraph()
+    g._append(Node(name="c1", op="conv", inputs=("x",), param="c1", pad=1,
+                   epilogue=Epilogue(bias=True)))
+    g.relu()
+    fg = fuse_graph(g)
+    assert fg.node("c1").epilogue == Epilogue(bias=True, relu=True)
+    want = compile_network(params, (("c1", 3, 8),), (2, 3, 16, 16),
+                           policy="pallas")
+    got = compile_network(params, fg, (2, 3, 16, 16), policy="pallas",
+                          fuse_epilogues=False)
+    np.testing.assert_array_equal(np.asarray(got(params, x)),
+                                  np.asarray(want(params, x)))
+    # idempotence: re-fusing a fully fused graph changes nothing
+    from repro.models import resnet
+    once = fuse_graph(resnet.to_graph())
+    twice = fuse_graph(once)
+    assert [str(nd) for nd in twice.nodes] == [str(nd) for nd in once.nodes]
+    assert twice.output == once.output
+
+
+def test_zoo_registry_lists_both_models():
+    from repro.models.zoo import conv_model_names, get_conv_model
+    assert {"vgg16", "resnet18"} <= set(conv_model_names())
+    with pytest.raises(KeyError, match="unknown conv model"):
+        get_conv_model("alexnet")
+    assert get_conv_model("resnet18").graph().conv_names()[0] == "stem"

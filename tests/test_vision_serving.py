@@ -104,7 +104,7 @@ def test_engine_outputs_bitwise_equal_direct_forward(vgg_params, policy):
     sizes = (1, 3, 2) if policy == "auto" else (1, 2)
     rng = np.random.default_rng(2)
     imgs = _requests(rng, sizes)
-    eng = VisionEngine(vgg_params, vgg.VGG_LAYERS, img=IMG, policy=policy,
+    eng = VisionEngine(vgg_params, vgg.to_graph(), img=IMG, policy=policy,
                        buckets=(2, 4))
     reqs = [eng.submit(im) for im in imgs]
     eng.run()
@@ -120,7 +120,7 @@ def test_engine_outputs_bitwise_equal_direct_forward(vgg_params, policy):
 def test_queue_drain_order_is_fifo(vgg_params):
     from repro.models import vgg
     from repro.serve.vision import VisionEngine
-    eng = VisionEngine(vgg_params, vgg.VGG_LAYERS, img=IMG, policy="auto",
+    eng = VisionEngine(vgg_params, vgg.to_graph(), img=IMG, policy="auto",
                        buckets=(1, 2))
     rng = np.random.default_rng(3)
     reqs = [eng.submit(im) for im in _requests(rng, (1,) * 5)]
@@ -138,7 +138,7 @@ def test_slot_refill_under_mixed_sizes(vgg_params):
     arrival order and occupancy/per-bucket accounting consistent."""
     from repro.models import vgg
     from repro.serve.vision import VisionEngine
-    eng = VisionEngine(vgg_params, vgg.VGG_LAYERS, img=IMG, policy="auto",
+    eng = VisionEngine(vgg_params, vgg.to_graph(), img=IMG, policy="auto",
                        buckets=(1, 2, 4))
     rng = np.random.default_rng(4)
     sizes = (3, 1, 1, 4, 2, 1)
@@ -159,7 +159,7 @@ def test_run_max_batches_never_drops_requests(vgg_params):
     popped into a staged batch that is silently discarded (regression)."""
     from repro.models import vgg
     from repro.serve.vision import VisionEngine
-    eng = VisionEngine(vgg_params, vgg.VGG_LAYERS, img=IMG, policy="auto",
+    eng = VisionEngine(vgg_params, vgg.to_graph(), img=IMG, policy="auto",
                        buckets=(1, 2))
     rng = np.random.default_rng(8)
     reqs = [eng.submit(im) for im in _requests(rng, (1,) * 8)]
@@ -175,7 +175,7 @@ def test_run_max_batches_never_drops_requests(vgg_params):
 def test_metrics_shape_and_kips(vgg_params):
     from repro.models import vgg
     from repro.serve.vision import VisionEngine
-    eng = VisionEngine(vgg_params, vgg.VGG_LAYERS, img=IMG, policy="auto",
+    eng = VisionEngine(vgg_params, vgg.to_graph(), img=IMG, policy="auto",
                        buckets=(2,))
     eng.warmup()
     rng = np.random.default_rng(5)
@@ -269,13 +269,13 @@ def test_mesh_sharded_matches_single_device(mesh_shape):
         imgs = [rng.standard_normal((n, 3, {IMG}, {IMG})).astype(np.float32)
                 for n in (1, 3, 2)]
 
-        single = VisionEngine(params, vgg.VGG_LAYERS, img={IMG},
+        single = VisionEngine(params, vgg.to_graph(), img={IMG},
                               policy="auto", buckets=(2, 4))
         reqs_s = [single.submit(im) for im in imgs]
         single.run()
 
         mesh = make_local_mesh({data}, {model})
-        eng = VisionEngine(params, vgg.VGG_LAYERS, img={IMG},
+        eng = VisionEngine(params, vgg.to_graph(), img={IMG},
                            policy="auto", buckets=(2, 4), mesh=mesh)
         assert all(w % {data} == 0 for w in eng.batcher.policy.widths)
         reqs_m = [eng.submit(im) for im in imgs]
@@ -313,12 +313,34 @@ def test_merge_bench_json_preserves_sections(tmp_path):
 
 def test_serving_summary_emits_all_metrics(tmp_path):
     from repro.serve.vision import serving_summary
-    d = serving_summary(requests=6, img=IMG, width_mult=WIDTH,
+    d = serving_summary("vgg16", requests=6, img=IMG, width_mult=WIDTH,
                         policy="auto", buckets=(1, 2, 4), seed=7)
     for k in ("images", "requests", "batches", "kips", "latency",
               "slot_occupancy", "per_bucket_batches", "compile",
               "workload"):
         assert k in d, k
     assert d["requests"] == 6 and d["images"] >= 6
+    assert d["workload"]["model"] == "vgg16"
     assert d["compile"]["distinct_schedules"] == 8
     assert set(d["latency"]) == {"p50_s", "p95_s", "p99_s", "mean_s"}
+
+
+def test_merge_bench_json_per_model_keys(tmp_path):
+    """Per-model serving metrics land under serving_by_model.<name> and a
+    non-vgg16 model never clobbers the legacy flat serving section."""
+    from repro.launch.serve import merge_bench_json
+    path = str(tmp_path / "BENCH_vgg.json")
+    json.dump({"latency": {"x": 1}}, open(path, "w"))
+    merge_bench_json({"kips": 1.0}, path, model="vgg16")
+    merge_bench_json({"kips": 2.0}, path, model="resnet18")
+    data = json.load(open(path))
+    assert data["latency"] == {"x": 1}                 # micro preserved
+    assert data["serving"] == {"kips": 1.0}            # vgg16 stays legacy
+    assert data["serving_by_model"] == {"vgg16": {"kips": 1.0},
+                                        "resnet18": {"kips": 2.0}}
+    # re-serving one model leaves the other model's snapshot intact
+    merge_bench_json({"kips": 3.0}, path, model="resnet18")
+    data = json.load(open(path))
+    assert data["serving"] == {"kips": 1.0}
+    assert data["serving_by_model"]["resnet18"] == {"kips": 3.0}
+    assert data["serving_by_model"]["vgg16"] == {"kips": 1.0}
