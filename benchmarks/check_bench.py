@@ -1,0 +1,171 @@
+"""CI perf-regression gate: compare a fresh ``BENCH_vgg.json`` against the
+committed ``benchmarks/baseline.json``.
+
+    PYTHONPATH=src python -m benchmarks.check_bench            # gate
+    PYTHONPATH=src python -m benchmarks.check_bench --update   # re-baseline
+
+Three metric classes, three disciplines:
+
+* **exact** — fold-reuse counters (hits / misses / replans / conv_layers /
+  distinct_schedules) and fused ``pallas_calls`` counts, per model, plus
+  the serving compiler's distinct-schedule counts.  These are *structural*
+  invariants of the engine: any drift means a schedule-cache, fusion, or
+  lowering change slipped in, and the gate fails on a difference of one.
+  A PR that changes them intentionally re-baselines with ``--update`` and
+  reviews the diff.
+* **latency** — per-image micro latencies and serving p95: fail on a
+  regression beyond ``--latency-tolerance`` (default 20%, the published
+  budget; ``BENCH_LATENCY_TOL`` overrides in CI).  Improvements always
+  pass — the gate is one-sided.
+* **throughput** — serving KIPS per model: fail when measured drops more
+  than the same tolerance below baseline.
+
+A fresh metric with no baseline entry fails the gate too (it means the
+baseline predates the metric — re-baseline deliberately, not silently).
+
+Time-based baselines are machine-shaped: the exact counts transfer
+anywhere, but latency/KIPS entries should be (re)generated on the runner
+class that enforces them.  CI uploads the ``BENCH_vgg`` artifact
+``if: always()`` — a *red* gate run still publishes its snapshot — so
+onboarding a new runner class is: let the first run fail, download that
+run's artifact, re-baseline from it (``--bench <artifact> --update``),
+and commit the reviewed diff.  Widening the tolerance is the wrong fix.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BENCH = "BENCH_vgg.json"
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+DEFAULT_TOL = 0.20
+
+_FOLD_KEYS = ("hits", "misses", "replans", "conv_layers",
+              "distinct_schedules")
+_LAT_KEYS = ("auto_per_img_s", "pallas_unfused_per_img_s",
+             "pallas_fused_per_img_s")
+MODELS = ("vgg16", "resnet18", "mobilenetv2")
+
+
+def extract(bench: dict) -> dict:
+    """Distill the gated metrics out of a full bench snapshot.  The
+    baseline file stores exactly this distillation (stable under bench
+    sections the gate doesn't police)."""
+    out = {"exact": {}, "latency": {}, "throughput": {}}
+
+    def model_section(name: str, sec: dict) -> None:
+        fr = sec.get("fold_reuse", {})
+        for k in _FOLD_KEYS:
+            if k in fr:
+                out["exact"][f"{name}.fold_reuse.{k}"] = int(fr[k])
+        if "pallas_calls" in sec:
+            out["exact"][f"{name}.pallas_calls"] = int(sec["pallas_calls"])
+        lat = sec.get("latency", {})
+        for k in _LAT_KEYS:
+            if k in lat:
+                out["latency"][f"{name}.latency.{k}"] = float(lat[k])
+
+    model_section("vgg16", bench)          # top level IS the vgg16 micro
+    for m in MODELS[1:]:
+        if m in bench:
+            model_section(m, bench[m])
+    for m, sec in (bench.get("serving_by_model") or {}).items():
+        comp = sec.get("compile", {})
+        if "distinct_schedules" in comp:
+            out["exact"][f"serving.{m}.distinct_schedules"] = \
+                int(comp["distinct_schedules"])
+        if "kips" in sec:
+            out["throughput"][f"serving.{m}.kips"] = float(sec["kips"])
+        p95 = sec.get("latency", {}).get("p95_s")
+        if p95 is not None:
+            out["latency"][f"serving.{m}.p95_s"] = float(p95)
+    return out
+
+
+def compare(fresh: dict, baseline: dict, tol: float) -> list:
+    """All gate violations as (kind, metric, message) triples."""
+    fails = []
+    for metric, want in sorted(baseline["exact"].items()):
+        got = fresh["exact"].get(metric)
+        if got != want:
+            fails.append(("exact", metric,
+                          f"expected {want}, measured {got} — structural "
+                          "drift (re-baseline with --update if intended)"))
+    for metric, base in sorted(baseline["latency"].items()):
+        got = fresh["latency"].get(metric)
+        if got is None:
+            fails.append(("latency", metric, "missing from fresh bench"))
+        elif got > base * (1.0 + tol):
+            fails.append(("latency", metric,
+                          f"{got:.6f}s vs baseline {base:.6f}s "
+                          f"(+{(got / base - 1) * 100:.1f}% > "
+                          f"{tol * 100:.0f}% budget)"))
+    for metric, base in sorted(baseline["throughput"].items()):
+        got = fresh["throughput"].get(metric)
+        if got is None:
+            fails.append(("throughput", metric, "missing from fresh bench"))
+        elif got < base * (1.0 - tol):
+            fails.append(("throughput", metric,
+                          f"{got:.3f} vs baseline {base:.3f} "
+                          f"({(1 - got / base) * 100:.1f}% drop > "
+                          f"{tol * 100:.0f}% budget)"))
+    # a metric the baseline has never seen means the baseline rotted —
+    # every class, or a new model's metrics would be silently ungated
+    for kind in ("exact", "latency", "throughput"):
+        for metric in sorted(fresh[kind]):
+            if metric not in baseline.get(kind, {}):
+                fails.append((kind, metric,
+                              "not in baseline — run --update to adopt it"))
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default=DEFAULT_BENCH)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--latency-tolerance", type=float,
+                    default=float(os.environ.get("BENCH_LATENCY_TOL",
+                                                 DEFAULT_TOL)))
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh bench "
+                         "instead of gating against it")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        fresh = extract(json.load(f))
+
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(fresh, f, indent=2, sort_keys=True)
+            f.write("\n")
+        n = sum(len(v) for v in fresh.values())
+        print(f"# baseline updated: {n} gated metrics -> {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"FAIL: no baseline at {args.baseline} — commit one with "
+              "--update", file=sys.stderr)
+        return 1
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    fails = compare(fresh, baseline, args.latency_tolerance)
+    n_checked = sum(len(baseline[k]) for k in
+                    ("exact", "latency", "throughput"))
+    if fails:
+        print(f"PERF GATE: {len(fails)}/{n_checked} checks failed "
+              f"(tolerance {args.latency_tolerance * 100:.0f}%):",
+              file=sys.stderr)
+        for kind, metric, msg in fails:
+            print(f"  [{kind}] {metric}: {msg}", file=sys.stderr)
+        return 1
+    print(f"# perf gate OK: {n_checked} metrics within budget "
+          f"(latency tolerance {args.latency_tolerance * 100:.0f}%, "
+          "counts exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -250,12 +250,25 @@ def measured_tuned(width: float = 0.25, img: int = 32, batch: int = 2
     return out
 
 
+def count_pallas_calls(net, params, img: int, batch: int = 1) -> int:
+    """Fused kernel launches in the compiled forward's jaxpr — the number
+    CI's perf gate (``benchmarks/check_bench.py``) pins exactly: a fusion
+    regression (a bias/BN/ReLU/pool/add escaping its conv's kernel)
+    changes this count before it changes any latency."""
+    import jax
+    import jax.numpy as jnp
+    x0 = jnp.zeros((batch, 3, img, img))
+    fn = getattr(net, "apply", net)
+    return str(jax.make_jaxpr(fn)(params, x0)).count("pallas_call")
+
+
 def model_micro(model: str, width: float = 0.0625, img: int = 32,
                 batch: int = 2, classes: int = 10) -> dict:
     """Per-model micro-bench through the streaming-graph lowering: any
     registered model (``models/zoo.py``) compiles via ``compile_network``
     and reports auto/fused/unfused per-image latency plus its fold-reuse
-    metric — the per-model section of the bench JSON."""
+    metric and fused pallas_call count — the per-model section of the
+    bench JSON."""
     import jax
     from repro.core.engine import compile_network
     from repro.models.zoo import get_conv_model
@@ -265,10 +278,10 @@ def model_micro(model: str, width: float = 0.0625, img: int = 32,
                               img=img, classes=classes)
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, 3, img, img))
 
-    def compiled(policy, fuse=True, cache=None):
+    def compiled(policy, fuse=True, cache=None, jit=True):
         return compile_network(params, spec.to_graph(),
                                (batch, 3, img, img), policy=policy,
-                               fuse_epilogues=fuse, cache=cache)
+                               fuse_epilogues=fuse, cache=cache, jit=jit)
 
     auto_net = compiled("auto")
     _, t_auto = _time_forward(auto_net.apply, params, x)
@@ -289,11 +302,14 @@ def model_micro(model: str, width: float = 0.0625, img: int = 32,
             "fused_speedup": round(t_un / t_fu, 3),
         },
         "fold_reuse": fused.fold_reuse(),
+        "pallas_calls": count_pallas_calls(
+            compiled("pallas", cache=fused.cache, jit=False), params, img),
     }
     fr = out["fold_reuse"]
     print(f"{model}_micro,width={width},img={img},"
           f"fused_per_image_s={out['latency']['pallas_fused_per_img_s']},"
           f"fused_speedup={out['latency']['fused_speedup']}x,"
+          f"pallas_calls={out['pallas_calls']},"
           f"schedules={fr['distinct_schedules']}/{fr['conv_layers']},"
           f"hit_rate={fr['hit_rate']}")
     return out
@@ -344,7 +360,8 @@ def main(csv=False):
     measured()
     measured_fused()
     measured_tuned()
-    model_micro("resnet18")    # the second registered model, same lowering
+    model_micro("resnet18")      # the other registered models — the same
+    model_micro("mobilenetv2")   # lowering covers dense, residual, grouped
     return u64_min
 
 

@@ -38,22 +38,25 @@ def emit_bench_json(path: str = BENCH_JSON, serving: bool = True) -> dict:
 
 def micro_summary(serving: bool = True) -> dict:
     """The BENCH_vgg.json payload: the vgg16 micro sections plus a
-    ``resnet18`` per-model micro-bench (both through the streaming-graph
-    lowering), so CI tracks the engine trajectory on both registered
-    models.  ``serving=False`` skips the serving drains — CI's
-    ``--micro`` step does, because the dedicated serving smoke jobs
-    (``launch/serve.py --vision [--model resnet18]``) produce those
+    ``model_micro`` section per other registered zoo model (resnet18,
+    mobilenetv2 — all through the streaming-graph lowering), so CI tracks
+    the engine trajectory on every model class it claims to cover,
+    grouped/depthwise included.  ``serving=False`` skips the serving
+    drains — CI's ``--micro`` step does, because the dedicated serving
+    smoke jobs (``launch/serve.py --vision [--model ...]``) produce those
     sections with larger request streams right after and would overwrite
     them anyway."""
     from benchmarks import fig9_vgg
     summary = fig9_vgg.bench_summary()
     summary["resnet18"] = fig9_vgg.model_micro("resnet18")
+    summary["mobilenetv2"] = fig9_vgg.model_micro("mobilenetv2")
     if serving:
         from repro.serve.vision import serving_summary
         summary["serving"] = serving_summary("vgg16", requests=16)
         summary["serving_by_model"] = {
             "vgg16": summary["serving"],
             "resnet18": serving_summary("resnet18", requests=16),
+            "mobilenetv2": serving_summary("mobilenetv2", requests=16),
         }
     return summary
 

@@ -49,7 +49,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.epilogue import (Epilogue, epilogue_out_hw, maxpool2x2)
-from repro.core.graph import GraphError, StreamGraph, as_graph, fuse_graph
+from repro.core.graph import (DEPTHWISE, GraphError, StreamGraph, as_graph,
+                              bn_scale_shift, fuse_graph)
 from repro.core.loopnest import ConvLoopNest
 from repro.core.mapping import (WS_ACC_BYTES_LIMIT, ConvBlockPlan,
                                 conv_working_set, plan_conv_blocks)
@@ -94,14 +95,18 @@ class ScheduleKey:
     s: int
     stride: int
     dilation: int = 1
+    groups: int = 1      # channel groups (depthwise = groups == c == nf);
+    #                      part of the filter-fold identity: the same
+    #                      (nf, c, r, s) tensor folds differently per group
 
     @classmethod
     def from_loopnest(cls, cv: ConvLoopNest) -> "ScheduleKey":
         return cls(nf=cv.nf, c=cv.c, r=cv.r, s=cv.s,
-                   stride=cv.stride, dilation=cv.dilation)
+                   stride=cv.stride, dilation=cv.dilation, groups=cv.groups)
 
     def __str__(self) -> str:
-        return f"{self.r}x{self.s}x{self.c}->{self.nf}/s{self.stride}"
+        g = f"/g{self.groups}" if self.groups > 1 else ""
+        return f"{self.r}x{self.s}x{self.c}->{self.nf}/s{self.stride}{g}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +136,8 @@ class ConvSchedule:
 
     def impl(self) -> str:
         """The ``kernels.ops.conv2d`` impl string for this dataflow."""
+        if self.dataflow == "depthwise":
+            return "fold_dw"
         return ("fold_ws" if self.dataflow == "weight_stationary"
                 else "fold_os")
 
@@ -150,6 +157,12 @@ def dataflow_traffic_bytes(cv: ConvLoopNest, plan: ConvBlockPlan,
     ``WS_ACC_BYTES_LIMIT`` (the epilogue-fused kernel falls back to
     output-stationary instead, which this tensor-level model cannot see —
     psum staging is the conservative price for both).
+
+    Grouped nests stream each group's input slice only through that
+    group's filter folds, so the WS input re-stream factor is the
+    *per-group* nf-fold count, not the global one.  A depthwise nest has
+    a single ``"depthwise"`` entry — every tensor is touched exactly once
+    (no depth folds to re-stream anything for).
     """
     bpe = bytes_per_elem
     sizes = cv.tensor_sizes()
@@ -158,13 +171,16 @@ def dataflow_traffic_bytes(cv: ConvLoopNest, plan: ConvBlockPlan,
     out_bytes = sizes["output"] * bpe
     clamped = plan.clamped(cv.nf, cv.c, cv.p)
     g_nf, g_c, g_p = clamped.grid
+    if cv.depthwise:
+        return {"depthwise": w_bytes + in_bytes + out_bytes}
+    g_nfg = max(g_nf // cv.groups, 1)       # nf folds per group
     psum = out_bytes if g_c == 1 else 2 * g_c * out_bytes
     acc_bytes = clamped.nf_block * g_p * clamped.p_block * cv.q * bpe
     ws_out = out_bytes if acc_bytes <= WS_ACC_BYTES_LIMIT else psum
     return {
-        "weight_stationary": w_bytes + g_nf * in_bytes + ws_out,
-        "weight_stationary_psum": w_bytes + g_nf * in_bytes + psum,
-        "output_stationary": g_p * w_bytes + g_nf * in_bytes + out_bytes,
+        "weight_stationary": w_bytes + g_nfg * in_bytes + ws_out,
+        "weight_stationary_psum": w_bytes + g_nfg * in_bytes + psum,
+        "output_stationary": g_p * w_bytes + g_nfg * in_bytes + out_bytes,
     }
 
 
@@ -217,6 +233,10 @@ def dataflow_costs(cv: ConvLoopNest, plan: ConvBlockPlan,
         return traffic_bytes / (cfg.offchip_gbps * 1e9) * (cfg.freq_ghz * 1e9)
 
     compute = cv.macs / cfg.tile_pes
+    if cv.depthwise:
+        # one dataflow exists: no depth folds, so weight- vs output-
+        # stationary is a distinction without a difference
+        return {"depthwise": compute + cycles(traffic["depthwise"])}
     return {
         "weight_stationary": compute + cycles(traffic["weight_stationary"]),
         "output_stationary": compute + cycles(traffic["output_stationary"]),
@@ -227,7 +247,11 @@ def select_dataflow(cv: ConvLoopNest, plan: ConvBlockPlan,
                     cfg: Optional[MavecConfig] = None,
                     costs: Optional[Dict[str, float]] = None) -> str:
     """Pick the cheaper dataflow; ties go to ``output_stationary`` (its
-    single output write avoids the host-side partial-sum reduce)."""
+    single output write avoids the host-side partial-sum reduce).
+    Depthwise nests have exactly one dataflow — the dedicated kernel with
+    no depth-fold reduction."""
+    if cv.depthwise:
+        return "depthwise"
     costs = costs if costs is not None else dataflow_costs(cv, plan, cfg)
     if costs["output_stationary"] <= costs["weight_stationary"]:
         return "output_stationary"
@@ -258,24 +282,60 @@ def tuning_candidates(cv: ConvLoopNest,
     Kept deliberately small (<= 12 timed runs per geometry, usually fewer
     after dedup): tuning is pay-once per ``ScheduleKey`` and persisted as
     JSON, but each timing is a real on-device run.
+
+    Grouped geometries snap the varied blocks back to divisors of the
+    per-group extents (``mapping.largest_divisor_le``) so every candidate
+    honors the no-fold-straddles-a-group invariant; depthwise geometries
+    vary the channel/P blocks only and race the single ``"depthwise"``
+    dataflow.
     """
+    from repro.core.mapping import largest_divisor_le
     base = (base_plan or plan_conv_blocks(cv, vmem_limit=vmem_limit)
             ).clamped(cv.nf, cv.c, cv.p)
 
+    if cv.depthwise:
+        def with_dw(c_b: int, p_b: int) -> ConvBlockPlan:
+            c_b = max(1, min(c_b, -(-cv.c // 8) * 8 if cv.c >= 8 else cv.c))
+            p_b = max(1, min(p_b, cv.p))
+            grid = (1, math.ceil(cv.c / c_b), math.ceil(cv.p / p_b))
+            return dataclasses.replace(
+                base, nf_block=c_b, c_block=c_b, p_block=p_b, grid=grid,
+                vmem_bytes=conv_working_set(cv, c_b, c_b, p_b))
+
+        c_b, p_b = base.c_block, base.p_block
+        plans: Dict[Tuple[int, int, int], Tuple[str, ConvBlockPlan]] = {}
+        for label, plan in (
+                ("base", base),
+                ("p_half", with_dw(c_b, p_b // 2)),
+                ("p_double", with_dw(c_b, p_b * 2)),
+                ("c_half", with_dw(c_b // 2, p_b)),
+                ("c_double", with_dw(c_b * 2, p_b)),
+        ):
+            plans.setdefault((plan.nf_block, plan.c_block, plan.p_block),
+                             (label, plan))
+        return [(label, plan, "depthwise") for label, plan in plans.values()]
+
     def with_blocks(nf_b: int, c_b: int, p_b: int) -> ConvBlockPlan:
-        if cv.nf >= 8:                      # keep the MXU-lane alignment
-            nf_b = -(-nf_b // 8) * 8
-        nf_b = max(1, min(nf_b, -(-cv.nf // 8) * 8 if cv.nf >= 8 else cv.nf))
-        c_b = max(1, min(c_b, cv.c))
+        if cv.groups > 1:
+            nf_b = largest_divisor_le(cv.nfg, max(nf_b, 1))
+            c_b = largest_divisor_le(cv.cg, max(c_b, 1))
+            grid = (cv.groups * (cv.nfg // nf_b), cv.cg // c_b,
+                    math.ceil(cv.p / max(1, min(p_b, cv.p))))
+        else:
+            if cv.nf >= 8:                  # keep the MXU-lane alignment
+                nf_b = -(-nf_b // 8) * 8
+            nf_b = max(1, min(nf_b,
+                              -(-cv.nf // 8) * 8 if cv.nf >= 8 else cv.nf))
+            c_b = max(1, min(c_b, cv.c))
+            grid = (math.ceil(cv.nf / nf_b), math.ceil(cv.c / c_b),
+                    math.ceil(cv.p / max(1, min(p_b, cv.p))))
         p_b = max(1, min(p_b, cv.p))
-        grid = (math.ceil(cv.nf / nf_b), math.ceil(cv.c / c_b),
-                math.ceil(cv.p / p_b))
         return dataclasses.replace(
             base, nf_block=nf_b, c_block=c_b, p_block=p_b, grid=grid,
             vmem_bytes=conv_working_set(cv, nf_b, c_b, p_b))
 
     nf_b, c_b, p_b = base.nf_block, base.c_block, base.p_block
-    plans: Dict[Tuple[int, int, int], Tuple[str, ConvBlockPlan]] = {}
+    plans = {}
     for label, plan in (
             ("base", base),
             ("p_half", with_blocks(nf_b, c_b, p_b // 2)),
@@ -310,20 +370,26 @@ def measure_schedule_ms(cv: ConvLoopNest, plan: ConvBlockPlan, dataflow: str,
     kx, kw, kr = jax.random.split(jax.random.PRNGKey(0), 3)
     x = jax.random.normal(
         kx, (cv.n, cv.c, cv.padded_x, cv.padded_y), jnp.float32)
-    w = jax.random.normal(kw, (cv.nf, cv.c, cv.r, cv.s), jnp.float32)
+    w = jax.random.normal(kw, (cv.nf, cv.cg, cv.r, cv.s), jnp.float32)
     bias = (jnp.zeros((cv.nf,), jnp.float32)
             if epilogue is not None and epilogue.bias else None)
+    scale = shift = None
+    if epilogue is not None and epilogue.scale:
+        scale = jnp.ones((cv.nf,), jnp.float32)
+        shift = jnp.zeros((cv.nf,), jnp.float32)
     residual = (jax.random.normal(kr, (cv.n, cv.nf, cv.p, cv.q), jnp.float32)
                 if epilogue is not None and epilogue.residual else None)
     fn = jax.jit(functools.partial(conv2d_folded, stride=cv.stride,
                                    plan=plan, dataflow=dataflow,
-                                   interpret=interpret, epilogue=epilogue))
+                                   interpret=interpret, epilogue=epilogue,
+                                   groups=cv.groups))
+    kw_args = dict(bias=bias, residual=residual, scale=scale, shift=shift)
     for _ in range(max(warmup, 1)):
-        fn(x, w, bias=bias, residual=residual).block_until_ready()
+        fn(x, w, **kw_args).block_until_ready()
     ts = []
     for _ in range(max(reps, 1)):
         t0 = time.perf_counter()
-        fn(x, w, bias=bias, residual=residual).block_until_ready()
+        fn(x, w, **kw_args).block_until_ready()
         ts.append((time.perf_counter() - t0) * 1e3)
     ts.sort()
     return ts[len(ts) // 2]
@@ -537,7 +603,8 @@ class ScheduleCache:
                          "c_block": s.plan.c_block,
                          "p_block": s.plan.p_block,
                          "grid": list(s.plan.grid),
-                         "vmem_bytes": s.plan.vmem_bytes},
+                         "vmem_bytes": s.plan.vmem_bytes,
+                         "groups": s.plan.groups},
                 "dataflow": s.dataflow,
                 "measured_ms": s.measured_ms,
                 "timings": [[lbl, ms] for lbl, ms in s.timings],
@@ -548,10 +615,24 @@ class ScheduleCache:
             json.dump(payload, f, indent=2)
         return len(entries)
 
+    @staticmethod
+    def _dataclass_kwargs(cls, d: dict) -> dict:
+        """Tuning-JSON schema tolerance: drop fields this build doesn't
+        know (a newer writer), and let dataclass defaults fill fields the
+        file doesn't have (an older writer — e.g. a pre-groups cache
+        defaults to ``groups=1`` instead of rotting)."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        return {k: v for k, v in d.items() if k in known}
+
     def load_tuning(self, path: str) -> int:
         """Install previously-measured winners from ``path``.  Loaded
         entries hit in both ``schedule_for`` and ``autotune_for`` (no
         re-measurement), preserving the measured ranking exactly.
+
+        Tuning JSON is schema-tolerant in both directions: entries written
+        before the ``groups`` axis existed load with ``groups=1`` (the
+        dense geometry they were measured on), and unknown extra fields
+        from a newer writer are ignored rather than treated as rot.
 
         Timings only transfer within a backend: a cache recorded on a
         different backend is ignored (returns 0, with a warning) so stale
@@ -586,14 +667,17 @@ class ScheduleCache:
         n = 0
         for e in entries:
             try:
-                key = ScheduleKey(**e["key"])
-                nest = ConvLoopNest(**e["nest"])
+                key = ScheduleKey(**self._dataclass_kwargs(ScheduleKey,
+                                                           e["key"]))
+                nest = ConvLoopNest(**self._dataclass_kwargs(ConvLoopNest,
+                                                             e["nest"]))
                 pd = e["plan"]
                 plan = ConvBlockPlan(nf_block=int(pd["nf_block"]),
                                      c_block=int(pd["c_block"]),
                                      p_block=int(pd["p_block"]),
                                      grid=tuple(int(g) for g in pd["grid"]),
-                                     vmem_bytes=int(pd["vmem_bytes"]))
+                                     vmem_bytes=int(pd["vmem_bytes"]),
+                                     groups=int(pd.get("groups", 1)))
                 dataflow = e["dataflow"]
                 measured_ms = e.get("measured_ms")
                 timings = tuple((lbl, float(ms))
@@ -632,7 +716,8 @@ class ScheduleCache:
         if fn is None:
             fn = functools.partial(conv2d_folded, plan=sched.plan,
                                    dataflow=sched.dataflow,
-                                   interpret=interpret, epilogue=epilogue)
+                                   interpret=interpret, epilogue=epilogue,
+                                   groups=sched.key.groups)
             self._kernels[kk] = fn
         return fn
 
@@ -769,14 +854,19 @@ def compile_network(params: Dict[str, Any],
         if nd.op == "conv":
             _need4d(nd, s_in)
             n_, chan, h, w_ = s_in
-            wshape = params[nd.param]["w"].shape          # (NF, C, R, S)
+            wshape = params[nd.param]["w"].shape       # (NF, C/groups, R, S)
             nf, cin, r, s = (int(d) for d in wshape)
-            if cin != chan:
+            groups = chan if nd.groups == DEPTHWISE else nd.groups
+            if cin * groups != chan:
                 raise GraphError(
-                    f"{nd.name}: weights expect {cin} input channels, "
-                    f"trunk carries {chan}")
-            cv = ConvLoopNest(n=n_, nf=nf, c=cin, r=r, s=s, x=h, y=w_,
-                              stride=nd.stride, pad=nd.pad)
+                    f"{nd.name}: weights expect {cin}x{groups} input "
+                    f"channels, trunk carries {chan}")
+            if nf % groups:
+                raise GraphError(
+                    f"{nd.name}: groups={groups} must divide the filter "
+                    f"count {nf}")
+            cv = ConvLoopNest(n=n_, nf=nf, c=chan, r=r, s=s, x=h, y=w_,
+                              stride=nd.stride, pad=nd.pad, groups=groups)
             epi, demoted_pool = nd.epilogue, False
             if epi is not None and epi.pool and (cv.p < 2 or cv.q < 2):
                 # output too small to pool in-kernel: demote to a
@@ -811,14 +901,25 @@ def compile_network(params: Dict[str, Any],
             shapes[nd.name] = (n_, nf, po, qo)
             plan_steps.append(("conv", nd.name, nd.all_inputs(),
                                (sched, epi, nd.stride, nd.pad, nd.param,
-                                demoted_pool)))
+                                demoted_pool, groups, nd.bn_param)))
         elif nd.op == "bias":
             _need4d(nd, s_in)
             shapes[nd.name] = s_in
             plan_steps.append(("bias", nd.name, nd.inputs, nd.param))
+        elif nd.op == "batchnorm":
+            _need4d(nd, s_in)
+            shapes[nd.name] = s_in
+            plan_steps.append(("batchnorm", nd.name, nd.inputs, nd.param))
         elif nd.op == "relu":
             shapes[nd.name] = s_in
             plan_steps.append(("relu", nd.name, nd.inputs, None))
+        elif nd.op == "relu6":
+            shapes[nd.name] = s_in
+            plan_steps.append(("relu6", nd.name, nd.inputs, None))
+        elif nd.op == "global_avgpool":
+            _need4d(nd, s_in)
+            shapes[nd.name] = (s_in[0], s_in[1], 1, 1)
+            plan_steps.append(("global_avgpool", nd.name, nd.inputs, None))
         elif nd.op == "maxpool2":
             _need4d(nd, s_in)
             n_, chan, h, w_ = s_in
@@ -854,7 +955,8 @@ def compile_network(params: Dict[str, Any],
         env: Dict[str, jnp.ndarray] = {g.input: x}
         for op, out, ins, info in steps:
             if op == "conv":
-                sched, epi, stride, pad, pname, demoted_pool = info
+                (sched, epi, stride, pad, pname, demoted_pool, groups,
+                 bn_param) = info
                 xin, w = env[ins[0]], p[pname]["w"]
                 if epi is not None:
                     # an epilogue on a conv node is graph semantics and is
@@ -863,28 +965,45 @@ def compile_network(params: Dict[str, Any],
                     # pre-fused graph — this compile never fuses there) it
                     # lowers through the XLA conv + reference epilogue
                     b = p[pname]["b"] if epi.bias else None
+                    scale = shift = None
+                    if epi.scale:
+                        # fold the BN statistics to the flush-time affine
+                        # at trace time (compile-time constants per call)
+                        scale, shift = bn_scale_shift(p[bn_param])
                     res = env[ins[1]] if epi.residual else None
                     if mode == "reference":
                         y = conv2d_fused(xin, w, b, stride=stride, pad=pad,
                                          epilogue=epi, impl="direct",
-                                         residual=res)
+                                         residual=res, scale=scale,
+                                         shift=shift, groups=groups)
                     else:
                         y = conv2d_fused(xin, w, b, stride=stride, pad=pad,
                                          epilogue=epi, impl=sched.impl(),
                                          plan=sched.plan,
-                                         interpret=interpret, residual=res)
+                                         interpret=interpret, residual=res,
+                                         scale=scale, shift=shift,
+                                         groups=groups)
                 elif mode == "reference":
-                    y = conv2d(xin, w, stride=stride, pad=pad, impl="direct")
+                    y = conv2d(xin, w, stride=stride, pad=pad, impl="direct",
+                               groups=groups)
                 else:
                     y = conv2d(xin, w, stride=stride, pad=pad,
                                impl=sched.impl(), plan=sched.plan,
-                               interpret=interpret)
+                               interpret=interpret, groups=groups)
                 env[out] = maxpool2x2(y) if demoted_pool else y
             elif op == "bias":
                 env[out] = (env[ins[0]]
                             + p[info]["b"][None, :, None, None])
+            elif op == "batchnorm":
+                scale, shift = bn_scale_shift(p[info])
+                env[out] = (env[ins[0]] * scale[None, :, None, None]
+                            + shift[None, :, None, None])
             elif op == "relu":
                 env[out] = jax.nn.relu(env[ins[0]])
+            elif op == "relu6":
+                env[out] = jnp.clip(env[ins[0]], 0.0, 6.0)
+            elif op == "global_avgpool":
+                env[out] = env[ins[0]].mean(axis=(2, 3), keepdims=True)
             elif op == "maxpool2":
                 env[out] = maxpool2x2(env[ins[0]])
             elif op == "residual_add":

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["Epilogue", "apply_epilogue", "epilogue_out_hw", "FUSED_RELU",
-           "FUSED_RELU_POOL", "FUSED_RESIDUAL_RELU"]
+           "FUSED_RELU_POOL", "FUSED_RESIDUAL_RELU", "FUSED_BN_RELU6"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,13 +31,21 @@ class Epilogue:
     """What the kernel does to a finished output fold at flush time.
 
     bias     — add a per-filter bias (the caller supplies the vector).
+    scale    — per-filter affine ``y*scale + shift`` (the caller supplies
+               both vectors): an inference batch-norm folded to its
+               scale/shift form at compile time (``core/graph.py``).
+               Applied after bias, before the residual — exactly where the
+               standalone ``batchnorm`` node sits, so fusing it is
+               bitwise-invariant.
     residual — add a skip-connection tensor shaped like the conv output
                (ResNet blocks: ``relu(conv(x) + b + shortcut)``; the
-               caller supplies the tensor).  Applied after bias, before
-               ReLU.  Incompatible with ``pool`` — ResNet adds the
+               caller supplies the tensor).  Applied after bias/scale,
+               before ReLU.  Incompatible with ``pool`` — ResNet adds the
                shortcut to the un-pooled output, and fusing both would
                make the residual's fold geometry ambiguous.
     relu     — clamp at zero.
+    relu6    — clamp to [0, 6] (the MobileNet activation); exclusive with
+               ``relu``.
     pool     — ``"max2"`` fuses a 2x2/2 max-pool (windows never straddle
                fold boundaries: the kernel rounds the P block to even).
                ``None`` leaves the spatial dims untouched.
@@ -46,6 +54,8 @@ class Epilogue:
     relu: bool = False
     pool: Optional[str] = None
     residual: bool = False
+    scale: bool = False
+    relu6: bool = False
 
     def __post_init__(self):
         if self.pool not in (None, "max2"):
@@ -53,13 +63,21 @@ class Epilogue:
         if self.residual and self.pool:
             raise ValueError("Epilogue(residual=True) cannot fuse a pool: "
                              "the shortcut adds to the un-pooled output")
+        if self.relu and self.relu6:
+            raise ValueError("relu and relu6 are exclusive activations")
 
     @property
     def identity(self) -> bool:
-        return not (self.bias or self.relu or self.pool or self.residual)
+        return not (self.bias or self.relu or self.relu6 or self.pool
+                    or self.residual or self.scale)
+
+    @property
+    def activation(self) -> bool:
+        return self.relu or self.relu6
 
     def __str__(self) -> str:
-        parts = [n for n in ("bias", "residual", "relu") if getattr(self, n)]
+        parts = [n for n in ("bias", "scale", "residual", "relu", "relu6")
+                 if getattr(self, n)]
         if self.pool:
             parts.append(self.pool)
         return "+".join(parts) or "id"
@@ -68,6 +86,7 @@ class Epilogue:
 FUSED_RELU = Epilogue(bias=True, relu=True)
 FUSED_RELU_POOL = Epilogue(bias=True, relu=True, pool="max2")
 FUSED_RESIDUAL_RELU = Epilogue(bias=True, relu=True, residual=True)
+FUSED_BN_RELU6 = Epilogue(scale=True, relu6=True)
 
 
 def epilogue_out_hw(epi: Optional["Epilogue"], p: int, q: int
@@ -88,7 +107,9 @@ def maxpool2x2(y: jnp.ndarray) -> jnp.ndarray:
 
 def apply_epilogue(y: jnp.ndarray, b: Optional[jnp.ndarray],
                    epi: Optional["Epilogue"],
-                   residual: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                   residual: Optional[jnp.ndarray] = None,
+                   scale: Optional[jnp.ndarray] = None,
+                   shift: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Reference epilogue on an NCHW conv output (oracle for the kernels)."""
     if epi is None or epi.identity:
         return y
@@ -96,6 +117,12 @@ def apply_epilogue(y: jnp.ndarray, b: Optional[jnp.ndarray],
         if b is None:
             raise ValueError("Epilogue(bias=True) needs a bias vector")
         y = y + b[None, :, None, None].astype(y.dtype)
+    if epi.scale:
+        if scale is None or shift is None:
+            raise ValueError("Epilogue(scale=True) needs scale and shift "
+                             "vectors")
+        y = (y * scale[None, :, None, None].astype(y.dtype)
+             + shift[None, :, None, None].astype(y.dtype))
     if epi.residual:
         if residual is None:
             raise ValueError("Epilogue(residual=True) needs a residual "
@@ -103,6 +130,8 @@ def apply_epilogue(y: jnp.ndarray, b: Optional[jnp.ndarray],
         y = y + residual.astype(y.dtype)
     if epi.relu:
         y = jax.nn.relu(y)
+    if epi.relu6:
+        y = jnp.clip(y, 0.0, 6.0)
     if epi.pool == "max2":
         y = maxpool2x2(y)
     return y

@@ -5,19 +5,22 @@ instruction streaming program — any conv network, not one fixed model,
 should lower onto the same compiled fold schedules.  ``StreamGraph`` is
 the small IR that makes the engine model-agnostic:
 
-* **Nodes** are typed ops — ``conv``, ``bias``, ``relu``, ``maxpool2``,
-  ``residual_add``, ``flatten``, ``dense`` — in SSA form: each node names
-  its value, inputs reference earlier nodes (or the graph input), and
-  skip edges are ordinary named inputs, so residual topologies are
-  first-class rather than special-cased in any model walker.
+* **Nodes** are typed ops — ``conv`` (grouped/depthwise via ``groups``),
+  ``bias``, ``batchnorm``, ``relu``, ``relu6``, ``maxpool2``,
+  ``residual_add``, ``flatten``, ``dense``, ``global_avgpool`` — in SSA
+  form: each node names its value, inputs reference earlier nodes (or the
+  graph input), and skip edges are ordinary named inputs, so residual
+  topologies are first-class rather than special-cased in any model
+  walker.
 
 * **``fuse_graph``** is the fusion pass: it folds each conv's downstream
-  bias → residual_add → relu → maxpool2 chain into the conv node's
-  ``Epilogue`` (``core/epilogue.py``), turning a whole conv block —
-  including a ResNet ``relu(conv(x) + b + shortcut)`` — into a single
-  node that lowers to one ``pallas_call``.  Fusion rules are documented
-  on the function; anything that cannot legally merge (multi-consumer
-  intermediates, pool after a residual) stays a standalone node.
+  bias → batchnorm → residual_add → relu[6] → maxpool2 chain into the
+  conv node's ``Epilogue`` (``core/epilogue.py``), turning a whole conv
+  block — a ResNet ``relu(conv(x) + b + shortcut)`` or a MobileNet
+  ``relu6(bn(conv(x)))`` — into a single node that lowers to one
+  ``pallas_call``.  Fusion rules are documented on the function; anything
+  that cannot legally merge (multi-consumer intermediates, pool after a
+  residual) stays a standalone node.
 
 * **Lowering** (``core/engine.py:compile_network``) walks a graph through
   one shared ``ScheduleCache`` into the jitted ``CompiledNetwork``
@@ -35,10 +38,18 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 from repro.core.epilogue import Epilogue
 
 __all__ = ["GraphError", "Node", "StreamGraph", "fuse_graph", "as_graph",
-           "lower", "OPS"]
+           "lower", "bn_scale_shift", "OPS", "BN_EPS", "DEPTHWISE"]
 
-OPS = ("conv", "bias", "relu", "maxpool2", "residual_add", "flatten",
-       "dense")
+OPS = ("conv", "bias", "batchnorm", "relu", "relu6", "maxpool2",
+       "residual_add", "flatten", "dense", "global_avgpool")
+
+# Inference batch-norm epsilon — one constant shared by the fused epilogue
+# lowering and the standalone batchnorm op, so fusing BN is bitwise-exact.
+BN_EPS = 1e-5
+
+# ``Node.groups`` sentinel: resolve to the input channel count at lowering
+# time (graphs are shape-free; a depthwise conv doesn't know C yet).
+DEPTHWISE = 0
 
 
 class GraphError(ValueError):
@@ -63,6 +74,12 @@ class Node:
     pad: int = 0
     epilogue: Optional[Epilogue] = None
     residual: Optional[str] = None
+    groups: int = 1              # conv channel groups; DEPTHWISE (0) means
+    #                              groups == input channels, resolved at
+    #                              lowering time
+    bn_param: Optional[str] = None   # set by the fusion pass: the folded
+    #                                  batch-norm's parameter entry
+    #                                  (Epilogue.scale reads it)
 
     def all_inputs(self) -> Tuple[str, ...]:
         """Data dependencies including the fused skip edge."""
@@ -74,6 +91,9 @@ class Node:
         extra = ""
         if self.op == "conv":
             extra = f" s{self.stride}p{self.pad}"
+            if self.groups != 1:
+                extra += (" dw" if self.groups == DEPTHWISE
+                          else f" g{self.groups}")
             if self.epilogue is not None:
                 extra += f" epi[{self.epilogue}]"
             if self.residual is not None:
@@ -159,9 +179,42 @@ class StreamGraph:
 
     def conv(self, name: str, src: Optional[str] = None, *,
              param: Optional[str] = None, stride: int = 1,
-             pad: int = 1) -> str:
+             pad: int = 1, groups: int = 1) -> str:
+        if groups < 0:
+            raise GraphError(f"{name}: groups must be >= 1 (or DEPTHWISE), "
+                             f"got {groups}")
         return self._add("conv", name, src, param=param or name,
-                         stride=int(stride), pad=int(pad))
+                         stride=int(stride), pad=int(pad),
+                         groups=int(groups))
+
+    def depthwise_conv(self, name: str, src: Optional[str] = None, *,
+                       param: Optional[str] = None, stride: int = 1,
+                       pad: int = 1) -> str:
+        """A conv whose group count equals its input channel count (one
+        filter per channel, weights (C, 1, R, S)); the channel count — and
+        with it the concrete ``groups`` — resolves at lowering time."""
+        return self.conv(name, src, param=param, stride=stride, pad=pad,
+                         groups=DEPTHWISE)
+
+    def batchnorm(self, name: Optional[str] = None,
+                  src: Optional[str] = None, *, param: str = None) -> str:
+        """Inference batch-norm: ``y*scale + shift`` with scale/shift
+        folded from ``params[param]`` ({gamma, beta, mean, var}) at trace
+        time (``bn_scale_shift``).  The fusion pass melts it into the
+        producing conv's epilogue (``Epilogue.scale``)."""
+        if param is None:
+            raise GraphError("batchnorm needs its own param entry "
+                             "(gamma/beta/mean/var)")
+        return self._add("batchnorm", name, src, param=param)
+
+    def relu6(self, name: Optional[str] = None,
+              src: Optional[str] = None) -> str:
+        return self._add("relu6", name, src)
+
+    def global_avgpool(self, name: Optional[str] = None,
+                       src: Optional[str] = None) -> str:
+        """Global average pool over the spatial dims -> (N, C, 1, 1)."""
+        return self._add("global_avgpool", name, src)
 
     def bias(self, name: Optional[str] = None, src: Optional[str] = None, *,
              param: Optional[str] = None) -> str:
@@ -251,20 +304,29 @@ def _toposort(nodes: List[Node], available: set) -> List[Node]:
 
 
 def fuse_graph(graph: StreamGraph) -> StreamGraph:
-    """Fold bias / residual_add / relu / maxpool2 chains into each conv's
-    ``Epilogue`` so one conv block lowers to one ``pallas_call``.
+    """Fold bias / batchnorm / residual_add / relu[6] / maxpool2 chains
+    into each conv's ``Epilogue`` so one conv block lowers to one
+    ``pallas_call``.
 
-    Rules (applied greedily, in epilogue order bias < residual < relu <
-    pool):
+    Rules (applied greedily, in epilogue order bias < batchnorm <
+    residual < relu/relu6 < pool):
 
     * a node is absorbed only while it is the *sole* consumer of the
       chain tip, and never past the graph output (its exact value must
       survive);
     * ``bias`` must read the conv's own parameter entry;
+    * ``batchnorm`` becomes the epilogue's scale+shift step
+      (``Epilogue(scale=True)``): the conv node records the BN parameter
+      entry (``Node.bn_param``) and the lowering folds gamma/beta/mean/var
+      to the two vectors at trace time — the MobileNet inverted-residual
+      chain (1x1 expand → depthwise → 1x1 project + residual) fuses to
+      exactly three kernels this way;
     * ``residual_add`` records the other operand as the conv's skip-edge
-      input — the shortcut adds to the pre-ReLU accumulator in-kernel
-      (``Epilogue(residual=True)``), and only one conv chain may absorb
-      any given add (first in program order wins);
+      input — the shortcut adds to the pre-activation accumulator
+      in-kernel (``Epilogue(residual=True)``), and only one conv chain may
+      absorb any given add (first in program order wins);
+    * ``relu`` and ``relu6`` are exclusive: whichever follows the chain
+      tip first claims the activation slot;
     * ``maxpool2`` never fuses after a residual (the shortcut adds to the
       un-pooled output — ``core/epilogue.py`` enforces the same).
 
@@ -276,7 +338,7 @@ def fuse_graph(graph: StreamGraph) -> StreamGraph:
     consumers = graph.consumers()
     absorbed: set = set()
     alias: Dict[str, str] = {}
-    fused: Dict[str, Tuple[Epilogue, Optional[str]]] = {}
+    fused: Dict[str, Tuple[Epilogue, Optional[str], Optional[str]]] = {}
 
     for nd in graph.nodes:
         if nd.op != "conv":
@@ -285,7 +347,8 @@ def fuse_graph(graph: StreamGraph) -> StreamGraph:
         # fused graph): absorbed ops extend it, never replace it, and the
         # in-order rules below refuse anything the existing flush already
         # covers or must precede
-        epi, res, tip = (nd.epilogue or Epilogue()), nd.residual, nd.name
+        epi, res, bn = (nd.epilogue or Epilogue()), nd.residual, nd.bn_param
+        tip = nd.name
         while tip != graph.output:
             cands = consumers.get(tip, [])
             if len(cands) != 1:
@@ -293,19 +356,27 @@ def fuse_graph(graph: StreamGraph) -> StreamGraph:
             c = cands[0]
             if c.name in absorbed:
                 break
-            if (c.op == "bias" and not (epi.bias or epi.residual
-                                        or epi.relu or epi.pool)
+            if (c.op == "bias" and not (epi.bias or epi.scale
+                                        or epi.residual or epi.activation
+                                        or epi.pool)
                     and c.param == nd.param):
                 epi = dataclasses.replace(epi, bias=True)
+            elif (c.op == "batchnorm"
+                    and not (epi.scale or epi.residual or epi.activation
+                             or epi.pool)):
+                epi = dataclasses.replace(epi, scale=True)
+                bn = c.param
             elif (c.op == "residual_add"
-                    and not (epi.residual or epi.relu or epi.pool)):
+                    and not (epi.residual or epi.activation or epi.pool)):
                 other = [i for i in c.inputs if i != tip]
                 if len(other) != 1:
                     break
                 epi = dataclasses.replace(epi, residual=True)
                 res = other[0]
-            elif c.op == "relu" and not (epi.relu or epi.pool):
+            elif c.op == "relu" and not (epi.activation or epi.pool):
                 epi = dataclasses.replace(epi, relu=True)
+            elif c.op == "relu6" and not (epi.activation or epi.pool):
+                epi = dataclasses.replace(epi, relu6=True)
             elif (c.op == "maxpool2"
                     and not (epi.pool or epi.residual)):
                 epi = dataclasses.replace(epi, pool="max2")
@@ -315,7 +386,7 @@ def fuse_graph(graph: StreamGraph) -> StreamGraph:
             alias[c.name] = nd.name
             tip = c.name
         if not epi.identity:
-            fused[nd.name] = (epi, res)
+            fused[nd.name] = (epi, res, bn)
 
     def rmap(n: Optional[str]) -> Optional[str]:
         return alias.get(n, n) if n is not None else None
@@ -329,8 +400,8 @@ def fuse_graph(graph: StreamGraph) -> StreamGraph:
         repl = dict(inputs=tuple(rmap(i) for i in nd.inputs),
                     residual=rmap(nd.residual))
         if nd.name in fused:
-            epi, res = fused[nd.name]
-            repl.update(epilogue=epi, residual=rmap(res))
+            epi, res, bn = fused[nd.name]
+            repl.update(epilogue=epi, residual=rmap(res), bn_param=bn)
         rebuilt.append(dataclasses.replace(nd, **repl))
 
     out = StreamGraph(name=graph.name, input_name=graph.input)
@@ -338,6 +409,17 @@ def fuse_graph(graph: StreamGraph) -> StreamGraph:
         out._append(nd)
     out.output = rmap(graph.output)
     return out
+
+
+def bn_scale_shift(bn: Dict, eps: float = BN_EPS):
+    """Fold inference batch-norm statistics to the per-channel affine the
+    epilogue applies: ``scale = gamma / sqrt(var + eps)``, ``shift = beta
+    - mean * scale``.  One definition shared by the fused-epilogue
+    lowering, the standalone ``batchnorm`` op, and the model reference
+    forwards — which is what makes BN fusion bitwise-invariant."""
+    import jax.numpy as jnp
+    scale = bn["gamma"] / jnp.sqrt(bn["var"] + eps)
+    return scale, bn["beta"] - bn["mean"] * scale
 
 
 def lower(graph: StreamGraph, params, input_shape, **compile_kw):

@@ -57,8 +57,34 @@ class ConvLoopNest:
     stride: int = 1
     pad: int = 0
     dilation: int = 1
+    groups: int = 1  # channel groups G: the C and N_F axes split into G
+    #                  independent fold families (depthwise = G == C)
+
+    def __post_init__(self):
+        if self.groups < 1:
+            raise ValueError(f"groups must be >= 1, got {self.groups}")
+        if self.c % self.groups or self.nf % self.groups:
+            raise ValueError(
+                f"groups={self.groups} must divide both C={self.c} and "
+                f"N_F={self.nf}")
 
     # ---- derived dims -----------------------------------------------------
+    @property
+    def cg(self) -> int:
+        """Input channels per group (the depth-fold extent of one group)."""
+        return self.c // self.groups
+
+    @property
+    def nfg(self) -> int:
+        """Filters per group."""
+        return self.nf // self.groups
+
+    @property
+    def depthwise(self) -> bool:
+        """The degenerate fold geometry with no depth reduction at all:
+        every channel is its own group with exactly one filter."""
+        return self.groups > 1 and self.groups == self.c == self.nf
+
     @property
     def p(self) -> int:
         """Output height P (derived, Fig 1b)."""
@@ -89,8 +115,10 @@ class ConvLoopNest:
     # ---- work census -------------------------------------------------------
     @property
     def macs(self) -> int:
-        """Multiply-accumulates across the full 7-D space."""
-        return self.n * self.nf * self.c * self.r * self.s * self.p * self.q
+        """Multiply-accumulates across the full 7-D space (each filter only
+        sees its own group's C/G channels)."""
+        return (self.n * self.nf * self.cg * self.r * self.s
+                * self.p * self.q)
 
     @property
     def flops(self) -> int:
@@ -100,7 +128,7 @@ class ConvLoopNest:
     def tensor_sizes(self) -> Dict[str, int]:
         """Element counts for the three participating tensors."""
         return {
-            "filter": self.nf * self.c * self.r * self.s,
+            "filter": self.nf * self.cg * self.r * self.s,
             "input": self.n * self.c * self.x * self.y,
             "output": self.n * self.nf * self.p * self.q,
         }
@@ -115,8 +143,9 @@ class ConvLoopNest:
         return dataclasses.replace(self, n=n)
 
     def __str__(self) -> str:  # e.g. "3x3x512x512@56x56 s1 p1"
+        g = f" g{self.groups}" if self.groups > 1 else ""
         return (f"{self.r}x{self.s}x{self.c}x{self.nf}@{self.x}x{self.y}"
-                f" s{self.stride} p{self.pad}")
+                f" s{self.stride} p{self.pad}{g}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -39,6 +39,7 @@ __all__ = [
     "MappingPlan",
     "ConvBlockPlan",
     "conv_working_set",
+    "largest_divisor_le",
     "plan_conv_blocks",
     "serving_conv_plan",
     "WS_ACC_BYTES_LIMIT",
@@ -127,10 +128,14 @@ class ConvBlockPlan:
     dedicated PE columns -- TPU adaptation, see DESIGN.md §3).
     """
     nf_block: int        # filters per fold  (R_P analogue; MXU-lane aligned)
-    c_block: int         # channels per fold (eq (2) analogue)
+    c_block: int         # channels per fold (eq (2) analogue; per-group
+    #                      when groups > 1)
     p_block: int         # output rows computed per grid step
     grid: Tuple[int, int, int]           # (nf folds, c folds, p folds)
     vmem_bytes: int      # estimated working set
+    groups: int = 1      # channel groups G the blocks were solved within:
+    #                      nf_block divides N_F/G and c_block divides C/G,
+    #                      so no fold ever straddles a group boundary
 
     @property
     def total_folds(self) -> int:
@@ -141,11 +146,22 @@ class ConvBlockPlan:
         grid.  This is what makes a cached schedule reusable across layers
         that share filter-fold geometry but differ spatially (the engine's
         fold reuse): blocks planned for the largest extent shrink exactly
-        to any smaller one."""
+        to any smaller one.  Layers sharing a ``ScheduleKey`` share
+        ``(nf, c, groups)``, so only the spatial P clamp ever varies for
+        grouped plans and the group-divisibility invariants survive."""
+        dw = self.groups > 1 and self.groups == c == nf   # depthwise
+        # depthwise channels are independent — the channel block spans the
+        # global C axis; grouped blocks live within one group's C/G slice
+        c_span = c if dw else c // self.groups
         nf_b = max(1, min(self.nf_block, nf))
-        c_b = max(1, min(self.c_block, c))
+        c_b = max(1, min(self.c_block, c_span))
         p_b = max(1, min(self.p_block, p))
-        grid = (math.ceil(nf / nf_b), math.ceil(c / c_b), math.ceil(p / p_b))
+        if dw:
+            nf_b = c_b                       # filters ride the channel block
+            grid = (1, math.ceil(c / c_b), math.ceil(p / p_b))
+        else:
+            grid = (math.ceil(nf / nf_b), math.ceil(c_span / c_b),
+                    math.ceil(p / p_b))
         if (nf_b, c_b, p_b, grid) == (self.nf_block, self.c_block,
                                       self.p_block, self.grid):
             return self
@@ -161,11 +177,27 @@ def conv_working_set(conv: ConvLoopNest, nf_block: int, c_block: int,
                      p_block: int, bytes_per_elem: int = 4) -> int:
     """VMEM bytes of one grid step's working set: weight fold + streamed
     image rows + block accumulator (shared by the block solver and the
-    autotuner's candidate variants)."""
-    w = nf_block * c_block * conv.r * conv.s
+    autotuner's candidate variants).  For a depthwise nest the weight fold
+    and accumulator ride the channel block (one filter per channel)."""
+    if conv.depthwise:
+        w = c_block * conv.r * conv.s
+        acc = c_block * p_block * conv.q
+    else:
+        w = nf_block * c_block * conv.r * conv.s
+        acc = nf_block * p_block * conv.q
     img = c_block * (p_block * conv.stride + conv.r) * conv.padded_y
-    acc = nf_block * p_block * conv.q
     return (w + img + acc) * bytes_per_elem
+
+
+def largest_divisor_le(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1).  Group-blocked
+    axes must tile exactly — a fold straddling a group boundary would mix
+    channels from two independent reductions."""
+    cap = max(1, min(cap, n))
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
 
 
 def plan_conv_blocks(conv: ConvLoopNest,
@@ -179,21 +211,55 @@ def plan_conv_blocks(conv: ConvLoopNest,
     C_P -> c_block:  largest channel count whose weight fold + streamed
            image tile + accumulator fit in ~half of VMEM (the other half is
            the Pallas double-buffer).
+
+    Grouped nests (``conv.groups > 1``) solve the same equations *within
+    one group*: ``nf_block`` divides N_F/G and ``c_block`` divides C/G
+    exactly (no fold straddles a group boundary), and the nf grid axis
+    spans all G groups' filter folds.  A depthwise nest (G == C == N_F)
+    has no depth folds at all — the channel block doubles as the filter
+    block and the grid's c axis walks the channels.
     """
-    nf_block = min(_round_up(conv.nf, 8), 2 * mxu)
     p_block = min(conv.p, max(1, 512 // max(conv.q, 1)))  # ~512 out positions
 
-    def working_set(c_b: int) -> int:
-        return conv_working_set(conv, nf_block, c_b, p_block, bytes_per_elem)
+    def working_set(nf_b: int, c_b: int) -> int:
+        return conv_working_set(conv, nf_b, c_b, p_block, bytes_per_elem)
 
+    if conv.depthwise:
+        # one filter per channel: block the channel axis only (channels are
+        # independent, so any block size is legal — lane-align when we can)
+        c_block = min(_round_up(conv.c, 8), 512)
+        while c_block > 1 and working_set(c_block, c_block) > vmem_limit // 2:
+            c_block //= 2
+        grid = (1, math.ceil(conv.c / c_block), math.ceil(conv.p / p_block))
+        return ConvBlockPlan(nf_block=c_block, c_block=c_block,
+                             p_block=p_block, grid=grid,
+                             vmem_bytes=working_set(c_block, c_block),
+                             groups=conv.groups)
+
+    if conv.groups > 1:
+        nfg, cg = conv.nfg, conv.cg
+        want_nf = min(_round_up(nfg, 8), 2 * mxu)
+        nf_block = largest_divisor_le(nfg, want_nf)
+        c_block = largest_divisor_le(cg, 512)
+        while (c_block > 1
+               and working_set(nf_block, c_block) > vmem_limit // 2):
+            c_block = largest_divisor_le(cg, c_block - 1)
+        grid = (conv.groups * (nfg // nf_block), cg // c_block,
+                math.ceil(conv.p / p_block))
+        return ConvBlockPlan(nf_block=nf_block, c_block=c_block,
+                             p_block=p_block, grid=grid,
+                             vmem_bytes=working_set(nf_block, c_block),
+                             groups=conv.groups)
+
+    nf_block = min(_round_up(conv.nf, 8), 2 * mxu)
     c_block = min(conv.c, 512)
-    while c_block > 1 and working_set(c_block) > vmem_limit // 2:
+    while c_block > 1 and working_set(nf_block, c_block) > vmem_limit // 2:
         c_block //= 2
     grid = (math.ceil(conv.nf / nf_block),
             math.ceil(conv.c / c_block),
             math.ceil(conv.p / p_block))
     return ConvBlockPlan(nf_block=nf_block, c_block=c_block, p_block=p_block,
-                         grid=grid, vmem_bytes=working_set(c_block))
+                         grid=grid, vmem_bytes=working_set(nf_block, c_block))
 
 
 # --------------------------------------------------------------------------

@@ -34,6 +34,18 @@ depth fold emits a partial-sum fold to HBM, reduced afterwards with XLA —
 as a benchmarking baseline only (``benchmarks/kernel_bench.py`` reports
 the bytes-moved delta); the engine never selects it.
 
+**Grouped convolution** (``groups > 1``) reuses both dataflows unchanged:
+the block plan solves the fold geometry *within one group* (``nf_block``
+divides N_F/G, ``c_block`` divides C/G — ``core/mapping.py``), the nf
+grid axis spans all G groups' filter folds, and only the input BlockSpec
+index map changes — it offsets the streamed channel block by the group
+the current filter fold belongs to.  The kernel bodies never learn about
+groups.  **Depthwise** (G == C == N_F) is the degenerate case with no
+depth folds at all, served by a dedicated kernel (``_dw_kernel``): grid
+(N, channel folds, P folds), one filter tap column per resident channel,
+the VPU doing per-channel multiply-accumulate with no reduction and the
+epilogue flushing every grid step (there is nothing to wait for).
+
 The in-kernel compute realizes the fold interaction of Fig 4: for each of
 the R*S filter taps, a strided window of the resident image rows is
 multiplied against the stationary tap column and accumulated — the MXU
@@ -60,7 +72,7 @@ from repro.core.mapping import (WS_ACC_BYTES_LIMIT, ConvBlockPlan,
 
 __all__ = ["conv2d_folded", "default_plan", "DATAFLOWS"]
 
-DATAFLOWS = ("weight_stationary", "output_stationary")
+DATAFLOWS = ("weight_stationary", "output_stationary", "depthwise")
 
 
 def _fold_partial(xv, w_ref, i_p, *, r: int, s: int, stride: int,
@@ -88,13 +100,22 @@ def _fold_partial(xv, w_ref, i_p, *, r: int, s: int, stride: int,
 
 
 def _flush_value(v, b_ref, epi: Epilogue, res=None):
-    """Apply the fused epilogue to a finished fp32 fold (nf_b, p_b, q)."""
+    """Apply the fused epilogue to a finished fp32 fold (nf_b, p_b, q).
+
+    ``b_ref`` is the (nf_b, 3) per-filter vector block: column 0 the bias,
+    columns 1-2 the folded batch-norm scale/shift (``Epilogue.scale``) —
+    unused columns are never read."""
     if epi.bias:
         v = v + b_ref[:, 0].astype(jnp.float32)[:, None, None]
+    if epi.scale:                            # inference BN: y*scale + shift
+        v = (v * b_ref[:, 1].astype(jnp.float32)[:, None, None]
+             + b_ref[:, 2].astype(jnp.float32)[:, None, None])
     if epi.residual:
         v = v + res.astype(jnp.float32)      # ResNet shortcut, pre-ReLU
     if epi.relu:
         v = jnp.maximum(v, 0.0)
+    if epi.relu6:
+        v = jnp.clip(v, 0.0, 6.0)            # MobileNet activation
     if epi.pool == "max2":
         v = maxpool2x2(v)        # p_b forced even: windows stay in-fold
     return v
@@ -166,6 +187,34 @@ def _os_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
                                   res).astype(out_ref.dtype)
 
 
+def _dw_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
+               stride: int, p_block: int, q: int, epi: Epilogue):
+    """Depthwise kernel: grid (N, c folds, p folds) — **no depth-fold
+    reduction exists**.  Each channel owns exactly one filter, so a grid
+    step's (c_b, p_block, q) output is finished the moment its R*S taps
+    have accumulated: the taps multiply the resident channel rows
+    elementwise on the VPU (no MXU contraction — there is no channel sum),
+    and the epilogue flushes immediately, every step.
+    """
+    res_ref, out_ref = (refs[0] if epi.residual else None, refs[-1])
+    i_p = pl.program_id(2)
+    xv = x_ref[0]                                      # (c_b, rows, y)
+    row0 = i_p * p_block * stride
+    rows = (p_block - 1) * stride + r
+    xwin = jax.lax.dynamic_slice(
+        xv, (0, row0, 0), (xv.shape[0], rows, xv.shape[2]))
+    acc = jnp.zeros((xv.shape[0], p_block, q), dtype=jnp.float32)
+    for ri in range(r):
+        for si in range(s):
+            win = xwin[:, ri:ri + p_block * stride:stride,
+                       si:si + q * stride:stride]      # (c_b, p_b, q)
+            tap = w_ref[:, 0, ri, si]                  # (c_b,)
+            acc += (win.astype(jnp.float32)
+                    * tap.astype(jnp.float32)[:, None, None])
+    res = res_ref[0] if epi.residual else None
+    out_ref[0] = _flush_value(acc, b_ref, epi, res).astype(out_ref.dtype)
+
+
 def _ws_psum_kernel(x_ref, w_ref, out_ref, *, r: int, s: int, stride: int,
                     p_block: int, q: int):
     """PR-1 weight-stationary formulation: each depth fold emits a
@@ -180,6 +229,73 @@ def default_plan(conv: ConvLoopNest, **kw) -> ConvBlockPlan:
     return plan_conv_blocks(conv, **kw)
 
 
+def _vector_block(nf: int, nf_pad: int, epi: Epilogue, bias, scale, shift
+                  ) -> jnp.ndarray:
+    """The (nf_pad, 3) per-filter vector block every fold kernel carries:
+    column 0 the bias, columns 1-2 the folded-BN scale/shift.  Columns the
+    epilogue doesn't enable are zeros and never read in-kernel."""
+    zero = jnp.zeros((nf,), jnp.float32)
+    cols = [bias.astype(jnp.float32) if epi.bias else zero,
+            scale.astype(jnp.float32) if epi.scale else zero,
+            shift.astype(jnp.float32) if epi.scale else zero]
+    out = jnp.stack(cols, axis=1)
+    if nf_pad != nf:
+        out = jnp.pad(out, ((0, nf_pad - nf), (0, 0)))
+    return out
+
+
+def _depthwise_call(x_padded, w, bias, scale, shift, residual,
+                    epi: Epilogue, stride: int,
+                    interpret: bool, out_dtype,
+                    c_b: int, p_b: int, g_c: int, g_p: int) -> jnp.ndarray:
+    """Bind the dedicated depthwise kernel: grid (N, c folds, p folds),
+    channels padded to the block multiple (each padded channel is an
+    independent dead lane), the epilogue flushed every grid step."""
+    n, c, xp_, yp_ = x_padded.shape
+    nf, _, r, s = w.shape                       # nf == c (checked upstream)
+    p = (xp_ - r) // stride + 1
+    q = (yp_ - s) // stride + 1
+    c_pad, p_pad = g_c * c_b, g_p * p_b
+    rows_needed = (p_pad - 1) * stride + r
+    if c_pad != c or rows_needed > xp_:
+        x_padded = jnp.pad(x_padded, ((0, 0), (0, c_pad - c),
+                                      (0, max(rows_needed - xp_, 0)), (0, 0)))
+    if c_pad != c:
+        w = jnp.pad(w, ((0, c_pad - c), (0, 0), (0, 0), (0, 0)))
+    xp_r = x_padded.shape[2]
+    b_arr = _vector_block(nf, c_pad, epi, bias, scale, shift)
+    if epi.residual and (c_pad != c or p_pad != p):
+        residual = jnp.pad(residual, ((0, 0), (0, c_pad - c),
+                                      (0, p_pad - p), (0, 0)))
+    pooled = epi.pool == "max2"
+    p_b_o = p_b // 2 if pooled else p_b
+    p_o_pad = p_pad // 2 if pooled else p_pad
+    q_o = q // 2 if pooled else q
+    p_valid, q_valid = epilogue_out_hw(epi, p, q)
+    kern = functools.partial(_dw_kernel, r=r, s=s, stride=stride,
+                             p_block=p_b, q=q, epi=epi)
+    in_specs = [
+        pl.BlockSpec((1, c_b, xp_r, yp_), lambda b, cc, pp: (b, cc, 0, 0)),
+        pl.BlockSpec((c_b, 1, r, s), lambda b, cc, pp: (cc, 0, 0, 0)),
+        pl.BlockSpec((c_b, 3), lambda b, cc, pp: (cc, 0)),
+    ]
+    args = [x_padded, w, b_arr]
+    if epi.residual:
+        in_specs.append(pl.BlockSpec((1, c_b, p_b, q),
+                                     lambda b, cc, pp: (b, cc, pp, 0)))
+        args.append(residual)
+    out = pl.pallas_call(
+        kern,
+        grid=(n, g_c, g_p),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, c_b, p_b_o, q_o),
+                               lambda b, cc, pp: (b, cc, pp, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c_pad, p_o_pad, q_o), out_dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:, :nf, :p_valid, :q_valid]
+
+
 def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
                   stride: int = 1,
                   plan: Optional[ConvBlockPlan] = None,
@@ -188,10 +304,13 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
                   out_dtype=None,
                   bias: Optional[jnp.ndarray] = None,
                   epilogue: Optional[Epilogue] = None,
-                  residual: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                  residual: Optional[jnp.ndarray] = None,
+                  scale: Optional[jnp.ndarray] = None,
+                  shift: Optional[jnp.ndarray] = None,
+                  groups: int = 1) -> jnp.ndarray:
     """Run the fold-streamed conv kernel on a PRE-PADDED input.
 
-    x_padded: (N, C, Xp, Yp)   w: (NF, C, R, S)   -> (N, NF, P', Q')
+    x_padded: (N, C, Xp, Yp)   w: (NF, C/groups, R, S)   -> (N, NF, P', Q')
     where (P', Q') = (P, Q) or (P//2, Q//2) when ``epilogue.pool`` fuses
     the 2x2/2 max-pool.
 
@@ -200,19 +319,26 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     to the actual dims here, which is what makes schedule reuse exact.
     ``interpret=None`` resolves via the engine's backend policy (real
     lowering on TPU, interpreter elsewhere).  ``epilogue`` (with ``bias``
-    when ``epilogue.bias``, and ``residual`` — an (N, NF, P, Q) shortcut —
-    when ``epilogue.residual``) is flushed in-kernel — see
-    ``core/epilogue.py``.
+    when ``epilogue.bias``, ``scale``/``shift`` — the folded batch-norm
+    vectors — when ``epilogue.scale``, and ``residual`` — an (N, NF, P, Q)
+    shortcut — when ``epilogue.residual``) is flushed in-kernel — see
+    ``core/epilogue.py``.  ``groups > 1`` streams per-group depth folds
+    (``dataflow="depthwise"`` selects the dedicated no-reduction kernel
+    for the G == C == N_F case).
     """
     n, c, xp_, yp_ = x_padded.shape
     nf, cw, r, s = w.shape
-    assert c == cw, (c, cw)
+    assert c == cw * groups, (c, cw, groups)
+    assert nf % groups == 0, (nf, groups)
     p = (xp_ - r) // stride + 1
     q = (yp_ - s) // stride + 1
     out_dtype = out_dtype or x_padded.dtype
     epi = epilogue or Epilogue()
     if epi.bias and bias is None:
         raise ValueError("epilogue.bias=True needs a bias vector")
+    if epi.scale and (scale is None or shift is None):
+        raise ValueError("epilogue.scale=True needs scale and shift "
+                         "vectors")
     if epi.residual:
         if residual is None:
             raise ValueError("epilogue.residual=True needs a residual "
@@ -225,9 +351,14 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     if interpret is None:
         from repro.core.engine import pallas_interpret_default
         interpret = pallas_interpret_default()
-    if plan is None:
+    if dataflow == "depthwise" and not (groups > 1 and groups == c == nf):
+        raise ValueError("dataflow='depthwise' needs groups == C == N_F, "
+                         f"got groups={groups}, C={c}, N_F={nf}")
+    if plan is None or plan.groups != groups:
+        # a plan solved for a different group structure cannot tile this
+        # layer (divisibility invariants differ) — re-solve
         cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s,
-                          x=xp_, y=yp_, stride=stride, pad=0)
+                          x=xp_, y=yp_, stride=stride, pad=0, groups=groups)
         plan = plan_conv_blocks(cv)
     plan = plan.clamped(nf, c, p)
     nf_b, c_b, p_b = plan.nf_block, plan.c_block, plan.p_block
@@ -237,18 +368,32 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
         p_b += 1
         g_p = -(-p // p_b)
 
+    if dataflow == "depthwise":
+        return _depthwise_call(x_padded, w, bias, scale, shift, residual,
+                               epi, stride, interpret, out_dtype,
+                               c_b, p_b, g_c, g_p)
+
     # Pad every tiled dim to an exact block multiple: zero channels/filters
     # contribute nothing to the accumulation, and extra bottom rows only
     # produce out-of-range outputs that are sliced away.  This keeps the
     # in-kernel dynamic_slice un-clamped (fold geometry stays exact).
-    # Aligned layers skip the pads entirely (no copy).
-    nf_pad, c_pad, p_pad = g_nf * nf_b, g_c * c_b, g_p * p_b
+    # Aligned layers skip the pads entirely (no copy).  Grouped layers are
+    # exactly tiled by construction (blocks divide the per-group extents),
+    # so only the bottom-row pad can apply.
+    if groups > 1:
+        nf_pad, c_pad = nf, c
+        g_nfg = g_nf // groups            # nf folds per group
+    else:
+        nf_pad, c_pad = g_nf * nf_b, g_c * c_b
+        g_nfg = g_nf
+    p_pad = g_p * p_b
     rows_needed = (p_pad - 1) * stride + r
     if c_pad != c or rows_needed > xp_:
         x_padded = jnp.pad(x_padded, ((0, 0), (0, c_pad - c),
                                       (0, max(rows_needed - xp_, 0)), (0, 0)))
     if nf_pad != nf or c_pad != c:
-        w = jnp.pad(w, ((0, nf_pad - nf), (0, c_pad - c), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, nf_pad - nf), (0, (c_pad - c) // groups),
+                        (0, 0), (0, 0)))
     xp_r = x_padded.shape[2]
 
     # a fused residual rides along full-height, resident like the
@@ -258,14 +403,20 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
             and ws_resident > WS_ACC_BYTES_LIMIT):
         # the full-height fp32 accumulator (+ resident residual) would not
         # fit VMEM: fall back to psum staging (or to the block-accumulator
-        # OS kernel when an epilogue must flush in-kernel) — mirrored by
-        # the spill price in ``core/engine.py:dataflow_traffic_bytes``
-        dataflow = ("weight_stationary_psum" if epi.identity
+        # OS kernel when an epilogue must flush in-kernel, and always for
+        # grouped layers — the psum formulation predates groups) —
+        # mirrored by the spill price in
+        # ``core/engine.py:dataflow_traffic_bytes``
+        dataflow = ("weight_stationary_psum"
+                    if epi.identity and groups == 1
                     else "output_stationary")
 
     if dataflow == "weight_stationary_psum":
         if not epi.identity:
             raise ValueError("the legacy psum dataflow has no fused epilogue")
+        if groups > 1:
+            raise ValueError("the legacy psum dataflow predates grouped "
+                             "convolution")
         # out: one partial-sum fold per depth fold (paper Fig 5, staged in
         # HBM — the formulation the in-kernel reduction replaces)
         kern = functools.partial(_ws_psum_kernel, r=r, s=s, stride=stride,
@@ -291,12 +442,7 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     if dataflow not in DATAFLOWS:
         raise ValueError(f"unknown dataflow {dataflow!r}")
 
-    if epi.bias:
-        b_arr = bias.astype(jnp.float32).reshape(nf, 1)
-        if nf_pad != nf:
-            b_arr = jnp.pad(b_arr, ((0, nf_pad - nf), (0, 0)))
-    else:
-        b_arr = jnp.zeros((nf_pad, 1), jnp.float32)
+    b_arr = _vector_block(nf, nf_pad, epi, bias, scale, shift)
 
     if epi.residual and (nf_pad != nf or p_pad != p):
         # zero-padded shortcut rows/filters align with the padded output
@@ -312,12 +458,20 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     if dataflow == "weight_stationary":
         kern = functools.partial(_ws_kernel, r=r, s=s, stride=stride,
                                  p_block=p_b, q=q, n_c=g_c, epi=epi)
+        if groups > 1:
+            # the streamed channel block lives in the group the current
+            # filter fold belongs to: offset by (group index) * (per-group
+            # c folds).  The kernel body is group-oblivious.
+            x_index = lambda b, f, cc, pp: (b, (f // g_nfg) * g_c + cc, 0, 0)  # noqa: E731,E501
+        else:
+            x_index = lambda b, f, cc, pp: (b, cc, 0, 0)      # noqa: E731
         in_specs = [
-            pl.BlockSpec((1, c_b, xp_r, yp_),
-                         lambda b, f, cc, pp: (b, cc, 0, 0)),
+            pl.BlockSpec((1, c_b, xp_r, yp_), x_index),
+            # weights are globally filter-indexed, per-group channel-
+            # indexed — (f, cc) addresses the right block in both cases
             pl.BlockSpec((nf_b, c_b, r, s),
                          lambda b, f, cc, pp: (f, cc, 0, 0)),
-            pl.BlockSpec((nf_b, 1), lambda b, f, cc, pp: (f, 0)),
+            pl.BlockSpec((nf_b, 3), lambda b, f, cc, pp: (f, 0)),
         ]
         args = [x_padded, w, b_arr]
         if epi.residual:
@@ -342,12 +496,15 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
         p_b_o = p_b // 2 if pooled else p_b
         kern = functools.partial(_os_kernel, r=r, s=s, stride=stride,
                                  p_block=p_b, q=q, n_c=g_c, epi=epi)
+        if groups > 1:
+            x_index = lambda b, f, pp, cc: (b, (f // g_nfg) * g_c + cc, 0, 0)  # noqa: E731,E501
+        else:
+            x_index = lambda b, f, pp, cc: (b, cc, 0, 0)      # noqa: E731
         in_specs = [
-            pl.BlockSpec((1, c_b, xp_r, yp_),
-                         lambda b, f, pp, cc: (b, cc, 0, 0)),
+            pl.BlockSpec((1, c_b, xp_r, yp_), x_index),
             pl.BlockSpec((nf_b, c_b, r, s),
                          lambda b, f, pp, cc: (f, cc, 0, 0)),
-            pl.BlockSpec((nf_b, 1), lambda b, f, pp, cc: (f, 0)),
+            pl.BlockSpec((nf_b, 3), lambda b, f, pp, cc: (f, 0)),
         ]
         args = [x_padded, w, b_arr]
         if epi.residual:

@@ -9,11 +9,14 @@ Dispatch policy:
   * ``impl`` forces a specific path:
       "fold_ws"   — weight-stationary Pallas (paper-faithful dataflow)
       "fold_os"   — output-stationary Pallas (beyond-paper optimized)
+      "fold_dw"   — the dedicated depthwise kernel (groups == C == N_F,
+                    no depth-fold reduction)
       "fold_auto" — Pallas with the dataflow picked by the engine's
                     cost model (``core/engine.py``)
-      "im2col"    — GEMM baseline (what the paper argues against)
-      "direct"    — shifted-matmul reference
-      "xla"       — lax.conv_general_dilated
+      "im2col"    — GEMM baseline (what the paper argues against;
+                    dense-only)
+      "direct"    — shifted-matmul reference (grouped via ``groups``)
+      "xla"       — lax.conv_general_dilated (feature_group_count)
   * ``plan`` pins a pre-solved ``ConvBlockPlan`` (the engine's schedule
     cache passes these in, so repeated geometries skip re-planning).
 
@@ -42,14 +45,18 @@ def default_conv_impl() -> str:
 
 
 # "fold_ws_psum" is the PR-1 weight-stationary formulation (partial-sum
-# folds staged in HBM, reduced with XLA) — kept for benchmarking only
-_FOLD_IMPLS = ("fold_ws", "fold_os", "fold_auto", "fold_ws_psum")
+# folds staged in HBM, reduced with XLA) — kept for benchmarking only;
+# "fold_dw" is the dedicated depthwise kernel (no depth-fold reduction)
+_FOLD_IMPLS = ("fold_ws", "fold_os", "fold_auto", "fold_ws_psum", "fold_dw")
 
 
-def _resolve_fold_dataflow(x, w, stride: int, pad: int, impl: str, plan):
+def _resolve_fold_dataflow(x, w, stride: int, pad: int, impl: str, plan,
+                           groups: int = 1):
     """Map a fold impl string to (plan, dataflow) for the Pallas kernel."""
     if impl == "fold_ws_psum":
         return plan, "weight_stationary_psum"
+    if impl == "fold_dw":
+        return plan, "depthwise"
     if impl == "fold_auto":
         # one-shot engine planning (use models via the engine's
         # ScheduleCache / compile_network to amortize this); a supplied
@@ -59,7 +66,7 @@ def _resolve_fold_dataflow(x, w, stride: int, pad: int, impl: str, plan):
         n, c, xh, xw = x.shape
         nf, _, r, s = w.shape
         cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s, x=xh, y=xw,
-                          stride=stride, pad=pad)
+                          stride=stride, pad=pad, groups=groups)
         if plan is None:
             return plan_and_dataflow(cv)
         return plan, select_dataflow(cv, plan)
@@ -68,34 +75,48 @@ def _resolve_fold_dataflow(x, w, stride: int, pad: int, impl: str, plan):
 
 
 def _conv2d_fwd_impl(x, w, stride: int, pad: int, impl: str,
-                     plan=None, interpret=None):
+                     plan=None, interpret=None, groups: int = 1):
     if impl == "xla":
         return jax.lax.conv_general_dilated(
             x, w, (stride, stride), [(pad, pad), (pad, pad)],
-            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=groups)
     if impl == "direct":
-        return _ref.conv2d_direct(x, w, stride, pad)
+        return _ref.conv2d_direct(x, w, stride, pad, groups)
     if impl == "im2col":
+        if groups > 1:
+            raise ValueError("the im2col GEMM baseline is dense-only "
+                             "(grouped oracle: impl='direct' or 'xla')")
         return _ref.conv2d_im2col(x, w, stride, pad)
     if impl in _FOLD_IMPLS:
-        plan, dataflow = _resolve_fold_dataflow(x, w, stride, pad, impl, plan)
+        plan, dataflow = _resolve_fold_dataflow(x, w, stride, pad, impl,
+                                                plan, groups)
         xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
         return conv2d_folded(xp, w, stride=stride, dataflow=dataflow,
-                             plan=plan, interpret=interpret)
+                             plan=plan, interpret=interpret, groups=groups)
     raise ValueError(f"unknown conv impl {impl!r}")
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def _conv2d(x, w, stride, pad, impl, plan, interpret):
-    return _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def _conv2d(x, w, stride, pad, impl, plan, interpret, groups):
+    return _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret, groups)
 
 
-def _conv2d_vjp_fwd(x, w, stride, pad, impl, plan, interpret):
-    return _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret), (x, w)
+def _conv2d_vjp_fwd(x, w, stride, pad, impl, plan, interpret, groups):
+    return (_conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret,
+                             groups), (x, w))
 
 
-def _conv2d_vjp_bwd(stride, pad, impl, plan, interpret, res, g):
+def _conv2d_vjp_bwd(stride, pad, impl, plan, interpret, groups, res, g):
     x, w = res
+    if groups > 1:
+        # grouped transposed-conv relations via the differentiable
+        # reference (the hand-written dense relations below assume a full
+        # depth reduction)
+        _, vjp = jax.vjp(
+            lambda xx, ww: _ref.conv2d_direct(xx, ww, stride, pad, groups),
+            x, w)
+        return vjp(g)
     n, c, xh, xw_ = x.shape
     nf, _, r, s = w.shape
     # dL/dx: transposed conv = conv of dilated g with spatially-flipped,
@@ -128,15 +149,17 @@ _conv2d.defvjp(_conv2d_vjp_fwd, _conv2d_vjp_bwd)
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0,
            impl: Optional[str] = None, plan=None,
-           interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Convolution through the fold framework.  x: NCHW, w: OIHW.
+           interpret: Optional[bool] = None,
+           groups: int = 1) -> jnp.ndarray:
+    """Convolution through the fold framework.  x: NCHW, w: OIHW (the
+    channel dim is per-group, C/groups, when ``groups > 1``).
 
     ``plan`` (a ``ConvBlockPlan``, typically from the engine's schedule
-    cache) and ``interpret`` thread through to the fold kernels; both are
-    static (hashable) and participate in jit caching.
+    cache), ``interpret`` and ``groups`` thread through to the fold
+    kernels; all are static (hashable) and participate in jit caching.
     """
     return _conv2d(x, w, stride, pad, impl or default_conv_impl(), plan,
-                   interpret)
+                   interpret, groups)
 
 
 # ---------------------------------------------------------------------------
@@ -144,76 +167,57 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0,
 # ---------------------------------------------------------------------------
 
 
-def _conv2d_fused_fwd_impl(x, w, b, stride: int, pad: int, epi: Epilogue,
-                           impl: str, plan, interpret, residual=None):
+def _conv2d_fused_fwd_impl(x, w, b, scale, shift, residual, stride: int,
+                           pad: int, epi: Epilogue, impl: str, plan,
+                           interpret, groups: int = 1):
     if impl in _FOLD_IMPLS:
-        plan, dataflow = _resolve_fold_dataflow(x, w, stride, pad, impl, plan)
+        plan, dataflow = _resolve_fold_dataflow(x, w, stride, pad, impl,
+                                                plan, groups)
         xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
         return conv2d_folded(xp, w, stride=stride, dataflow=dataflow,
                              plan=plan, interpret=interpret,
-                             bias=b, epilogue=epi, residual=residual)
+                             bias=b, epilogue=epi, residual=residual,
+                             scale=scale, shift=shift, groups=groups)
     # non-Pallas impls: run the plain conv, then the reference epilogue
     # chain (XLA fuses it into the same computation anyway)
-    y = _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret)
-    return apply_epilogue(y, b, epi, residual)
+    y = _conv2d_fwd_impl(x, w, stride, pad, impl, plan, interpret, groups)
+    return apply_epilogue(y, b, epi, residual, scale, shift)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def _conv2d_fused(x, w, b, stride, pad, epi, impl, plan, interpret):
-    return _conv2d_fused_fwd_impl(x, w, b, stride, pad, epi, impl, plan,
-                                  interpret)
+# One custom_vjp covers every optional-operand combination: unused
+# operands are passed as None (an empty pytree — no gradient slot), so a
+# plain conv+bias, a BN-folded MobileNet block, and a ResNet residual
+# block all share this op and all train end to end.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12))
+def _conv2d_fused(x, w, b, scale, shift, res, stride, pad, epi, impl, plan,
+                  interpret, groups):
+    return _conv2d_fused_fwd_impl(x, w, b, scale, shift, res, stride, pad,
+                                  epi, impl, plan, interpret, groups)
 
 
-def _conv2d_fused_vjp_fwd(x, w, b, stride, pad, epi, impl, plan, interpret):
-    out = _conv2d_fused_fwd_impl(x, w, b, stride, pad, epi, impl, plan,
-                                 interpret)
-    return out, (x, w, b)
+def _conv2d_fused_vjp_fwd(x, w, b, scale, shift, res, stride, pad, epi,
+                          impl, plan, interpret, groups):
+    out = _conv2d_fused_fwd_impl(x, w, b, scale, shift, res, stride, pad,
+                                 epi, impl, plan, interpret, groups)
+    return out, (x, w, b, scale, shift, res)
 
 
-def _conv2d_fused_vjp_bwd(stride, pad, epi, impl, plan, interpret, res, g):
+def _conv2d_fused_vjp_bwd(stride, pad, epi, impl, plan, interpret, groups,
+                          saved, g):
     # rematerialize through the reference chain: the Pallas kernel never
     # stores pre-activation intermediates, so the backward pass recomputes
     # them (standard rematerialization; every impl stays trainable)
-    x, w, b = res
+    x, w, b, scale, shift, res = saved
 
-    def ref_chain(x, w, b):
-        return apply_epilogue(_ref.conv2d_direct(x, w, stride, pad), b, epi)
+    def ref_chain(x, w, b, scale, shift, res):
+        return apply_epilogue(_ref.conv2d_direct(x, w, stride, pad, groups),
+                              b, epi, res, scale, shift)
 
-    _, vjp = jax.vjp(ref_chain, x, w, b)
+    _, vjp = jax.vjp(ref_chain, x, w, b, scale, shift, res)
     return vjp(g)
 
 
 _conv2d_fused.defvjp(_conv2d_fused_vjp_fwd, _conv2d_fused_vjp_bwd)
-
-
-# residual variant: the shortcut is a fourth differentiable input, so
-# ResNet blocks built on the fused op train end to end
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
-def _conv2d_fused_res(x, w, b, res, stride, pad, epi, impl, plan, interpret):
-    return _conv2d_fused_fwd_impl(x, w, b, stride, pad, epi, impl, plan,
-                                  interpret, residual=res)
-
-
-def _conv2d_fused_res_vjp_fwd(x, w, b, res, stride, pad, epi, impl, plan,
-                              interpret):
-    out = _conv2d_fused_fwd_impl(x, w, b, stride, pad, epi, impl, plan,
-                                 interpret, residual=res)
-    return out, (x, w, b, res)
-
-
-def _conv2d_fused_res_vjp_bwd(stride, pad, epi, impl, plan, interpret,
-                              saved, g):
-    x, w, b, res = saved
-
-    def ref_chain(x, w, b, res):
-        return apply_epilogue(_ref.conv2d_direct(x, w, stride, pad), b, epi,
-                              res)
-
-    _, vjp = jax.vjp(ref_chain, x, w, b, res)
-    return vjp(g)
-
-
-_conv2d_fused_res.defvjp(_conv2d_fused_res_vjp_fwd, _conv2d_fused_res_vjp_bwd)
 
 
 def conv2d_fused(x: jnp.ndarray, w: jnp.ndarray,
@@ -221,29 +225,35 @@ def conv2d_fused(x: jnp.ndarray, w: jnp.ndarray,
                  pad: int = 0, epilogue: Optional[Epilogue] = None,
                  impl: Optional[str] = None, plan=None,
                  interpret: Optional[bool] = None,
-                 residual: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Convolution with the epilogue flushed in-kernel.  x: NCHW, w: OIHW,
-    b: (NF,) per-filter bias (required when ``epilogue.bias``),
-    residual: (N, NF, P, Q) shortcut (required when ``epilogue.residual``).
+                 residual: Optional[jnp.ndarray] = None,
+                 scale: Optional[jnp.ndarray] = None,
+                 shift: Optional[jnp.ndarray] = None,
+                 groups: int = 1) -> jnp.ndarray:
+    """Convolution with the epilogue flushed in-kernel.  x: NCHW, w: OIHW
+    (per-group channel dim when ``groups > 1``), b: (NF,) per-filter bias
+    (required when ``epilogue.bias``), scale/shift: (NF,) folded-BN
+    vectors (required when ``epilogue.scale``), residual: (N, NF, P, Q)
+    shortcut (required when ``epilogue.residual``).
 
     On the fold impls the epilogue executes inside the conv's single
     ``pallas_call`` at partial-sum flush time (``kernels/conv2d_ws.py``);
-    the whole conv→bias(→+shortcut)→ReLU(→pool) chain is one kernel launch
-    and the pre-activation tensor never reaches HBM.  Output is
+    the whole conv→bias/BN(→+shortcut)→ReLU[6](→pool) chain is one kernel
+    launch and the pre-activation tensor never reaches HBM.  Output is
     (N, NF, P, Q), or (N, NF, P//2, Q//2) when ``epilogue.pool`` fuses the
     2x2 max-pool.
     """
     epi = epilogue if epilogue is not None else Epilogue(
-        bias=b is not None, residual=residual is not None)
+        bias=b is not None, residual=residual is not None,
+        scale=scale is not None)
     if epi.residual != (residual is not None):
         raise ValueError("epilogue.residual and the residual argument must "
                          "be supplied together")
+    if epi.scale != (scale is not None and shift is not None):
+        raise ValueError("epilogue.scale and the scale/shift arguments "
+                         "must be supplied together")
     fwd_impl = impl or default_conv_impl()
-    if residual is not None:
-        return _conv2d_fused_res(x, w, b, residual, stride, pad, epi,
-                                 fwd_impl, plan, interpret)
-    return _conv2d_fused(x, w, b, stride, pad, epi, fwd_impl, plan,
-                         interpret)
+    return _conv2d_fused(x, w, b, scale, shift, residual, stride, pad, epi,
+                         fwd_impl, plan, interpret, groups)
 
 
 # ---------------------------------------------------------------------------

@@ -21,27 +21,43 @@ def _pad_nchw(x: jnp.ndarray, pad: int) -> jnp.ndarray:
 
 
 def conv2d_direct(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
-                  pad: int = 0) -> jnp.ndarray:
+                  pad: int = 0, groups: int = 1) -> jnp.ndarray:
     """Direct 7-loop convolution, vectorized as R*S shifted matmuls.
 
-    x: (N, C, X, Y)  w: (NF, C, R, S)  ->  (N, NF, P, Q)
+    x: (N, C, X, Y)  w: (NF, C/groups, R, S)  ->  (N, NF, P, Q)
 
     This is the semantics oracle: it walks the (R, S) loops explicitly and
-    accumulates partial sums, mirroring the paper's reduction order.
+    accumulates partial sums, mirroring the paper's reduction order.  With
+    ``groups > 1`` each filter contracts only its own group's C/G channel
+    slice (the depth reduction runs per group; depthwise = groups == C).
     """
     n, c, _, _ = x.shape
-    nf, _, r, s = w.shape
+    nf, cw, r, s = w.shape
+    assert c == cw * groups, (c, cw, groups)
     xp = _pad_nchw(x, pad)
     p = (xp.shape[2] - r) // stride + 1
     q = (xp.shape[3] - s) // stride + 1
-    acc = jnp.zeros((n, nf, p, q), dtype=jnp.float32)
+    if groups == 1:
+        acc = jnp.zeros((n, nf, p, q), dtype=jnp.float32)
+        for ri in range(r):
+            for si in range(s):
+                win = xp[:, :, ri:ri + p * stride:stride,
+                         si:si + q * stride:stride]      # (N, C, P, Q)
+                acc = acc + jnp.einsum("ncpq,fc->nfpq", win, w[:, :, ri, si],
+                                       preferred_element_type=jnp.float32)
+        return acc.astype(x.dtype)
+    nfg = nf // groups
+    xg = xp.reshape(n, groups, cw, xp.shape[2], xp.shape[3])
+    wg = w.reshape(groups, nfg, cw, r, s)
+    acc = jnp.zeros((n, groups, nfg, p, q), dtype=jnp.float32)
     for ri in range(r):
         for si in range(s):
-            win = xp[:, :, ri:ri + p * stride:stride,
-                     si:si + q * stride:stride]          # (N, C, P, Q)
-            acc = acc + jnp.einsum("ncpq,fc->nfpq", win, w[:, :, ri, si],
+            win = xg[:, :, :, ri:ri + p * stride:stride,
+                     si:si + q * stride:stride]          # (N, G, Cg, P, Q)
+            acc = acc + jnp.einsum("ngcpq,gfc->ngfpq", win,
+                                   wg[:, :, :, ri, si],
                                    preferred_element_type=jnp.float32)
-    return acc.astype(x.dtype)
+    return acc.reshape(n, nf, p, q).astype(x.dtype)
 
 
 def conv2d_im2col(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,

@@ -5,6 +5,7 @@ vision engine (``serve/vision.py``).
     python -m repro.launch.serve --arch qwen3-4b --requests 8
     python -m repro.launch.serve --vision --requests 32 --backend interpret
     python -m repro.launch.serve --vision --model resnet18 --requests 16
+    python -m repro.launch.serve --vision --model mobilenetv2 --requests 16
 
 The vision path serves a deterministic mixed-size request stream through
 the bucketed ``CompiledNetwork`` forwards of any registered conv model

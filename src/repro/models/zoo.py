@@ -92,3 +92,7 @@ def _ensure_builtin() -> None:
     if "resnet18" not in _REGISTRY:
         from repro.models import resnet
         register_conv_model("resnet18", resnet.init_params, resnet.to_graph)
+    if "mobilenetv2" not in _REGISTRY:
+        from repro.models import mobilenet
+        register_conv_model("mobilenetv2", mobilenet.init_params,
+                            mobilenet.to_graph)
