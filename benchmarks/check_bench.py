@@ -84,6 +84,48 @@ def extract(bench: dict) -> dict:
     return out
 
 
+def validate_baseline(baseline) -> list:
+    """Every schema problem in a loaded baseline, as human-readable
+    strings — the gate refuses to run against a malformed baseline, and
+    reports *all* defects in one pass rather than dying on the first
+    KeyError mid-comparison."""
+    problems = []
+    if not isinstance(baseline, dict):
+        return [f"baseline must be a JSON object, got "
+                f"{type(baseline).__name__}"]
+    known = {"exact": int, "latency": float, "throughput": float}
+    for section, want in known.items():
+        sec = baseline.get(section)
+        if sec is None:
+            problems.append(f"missing section {section!r} (an old or "
+                            f"hand-edited baseline — regenerate with "
+                            f"--update)")
+            continue
+        if not isinstance(sec, dict):
+            problems.append(f"section {section!r} must map metric -> "
+                            f"value, got {type(sec).__name__}")
+            continue
+        for metric, value in sorted(sec.items()):
+            if not isinstance(metric, str):
+                problems.append(f"[{section}] non-string metric name "
+                                f"{metric!r}")
+            if isinstance(value, bool) or not isinstance(value,
+                                                         (int, float)):
+                problems.append(f"[{section}] {metric}: value {value!r} "
+                                f"is not a number")
+            elif want is int and value != int(value):
+                problems.append(f"[{section}] {metric}: {value!r} is not "
+                                f"an integral count (exact metrics gate "
+                                f"on equality)")
+            elif value < 0:
+                problems.append(f"[{section}] {metric}: negative value "
+                                f"{value!r}")
+    for section in sorted(set(baseline) - set(known)):
+        problems.append(f"unknown section {section!r} (want exact / "
+                        f"latency / throughput)")
+    return problems
+
+
 def compare(fresh: dict, baseline: dict, tol: float) -> list:
     """All gate violations as (kind, metric, message) triples."""
     fails = []
@@ -150,6 +192,14 @@ def main(argv=None) -> int:
         return 1
     with open(args.baseline) as f:
         baseline = json.load(f)
+
+    problems = validate_baseline(baseline)
+    if problems:
+        print(f"FAIL: baseline {args.baseline} is malformed "
+              f"({len(problems)} problem(s)):", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
 
     fails = compare(fresh, baseline, args.latency_tolerance)
     n_checked = sum(len(baseline[k]) for k in

@@ -1,0 +1,44 @@
+"""Static analysis for the fold-schedule engine (``foldlint``).
+
+The paper treats the 7-D conv loop nest as safe to decompose into
+spatial/temporal mappings only because the mappings obey hard invariants:
+fold coverage, group divisibility, VMEM residency, single-writer
+accumulators.  This package *proves* those invariants statically — before
+anything is traced or compiled — in the role a race detector or sanitizer
+plays in a training stack:
+
+* ``plan_check``   — ``ConvBlockPlan`` invariants (divisibility, MXU
+                     alignment, VMEM working set, clamp preservation,
+                     grid/fold coverage arithmetic).
+* ``index_check``  — symbolic enumeration of each kernel's grid x
+                     BlockSpec index maps (``FoldKernelSpec``): in-bounds
+                     reads, exactly-once output writes, per-group input
+                     offsets, write-race detection.
+* ``graph_check``  — ``StreamGraph`` linting plus an independent
+                     re-derivation of ``fuse_graph``'s legality rules.
+* ``jaxpr_audit``  — ``audit_compiled()``: pallas_call counting and
+                     unfused-epilogue-op detection on the traced jaxpr.
+* ``foldlint``     — the CLI tying them together over the model zoo
+                     (``python -m repro.analysis.foldlint``).
+
+``core/engine.py:compile_network(verify=True)`` runs the plan and index
+checks inline (memoized per schedule geometry, so the steady-state cost is
+a dict lookup) and raises ``FoldLintError`` on any error-severity finding.
+"""
+from repro.analysis.graph_check import check_fusion, lint_graph
+from repro.analysis.index_check import check_kernel_spec
+from repro.analysis.jaxpr_audit import AuditReport, audit_compiled
+from repro.analysis.plan_check import check_plan
+from repro.analysis.report import Finding, FoldLintError, Report
+
+__all__ = [
+    "AuditReport",
+    "Finding",
+    "FoldLintError",
+    "Report",
+    "audit_compiled",
+    "check_fusion",
+    "check_kernel_spec",
+    "check_plan",
+    "lint_graph",
+]

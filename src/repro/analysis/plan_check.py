@@ -1,0 +1,153 @@
+"""ConvBlockPlan invariant verifier.
+
+A ``ConvBlockPlan`` is the solved fold geometry for one loop nest: the
+Filter Fold (``nf_block``), the depth fold (``c_block``), and the image
+fold (``p_block``), plus the Pallas grid that walks them.  The planner
+(``core/mapping.py:plan_conv_blocks``) *constructs* plans satisfying these
+invariants; this module *proves* an arbitrary plan satisfies them, so a
+hand-edited, cache-corrupted, or future-planner plan is caught before it
+reaches a kernel:
+
+  plan.groups-mismatch  the plan was solved for a different group
+                        structure than the nest (G differs)
+  plan.degenerate       a block or grid extent is < 1
+  plan.group-straddle   ``nf_block`` does not divide N_F/G or ``c_block``
+                        does not divide C/G — a fold would mix channels
+                        from two independent group reductions
+  plan.depthwise-shape  depthwise (G == C == N_F) plans must ride the
+                        channel block (nf_block == c_block, one nf fold)
+  plan.mxu-align        the filter fold is not MXU-lane aligned (dense
+                        layers with N_F >= 8 want nf_block % 8 == 0)
+  plan.grid-coverage    grid x block does not cover each (N_F, C, P)
+                        extent exactly once (under- or over-coverage)
+  plan.not-clamped      ``clamped()`` is not idempotent at the nest's own
+                        dims — the plan does not describe this layer
+  plan.vmem-overflow    ``conv_working_set`` exceeds the VMEM limit
+  plan.vmem-pressure    (warning) working set exceeds the planner's
+                        half-capacity target, eating the double-buffer
+"""
+from __future__ import annotations
+
+import math
+
+from repro.analysis.report import Report, WARNING
+from repro.core.loopnest import ConvLoopNest
+from repro.core.mapping import ConvBlockPlan, conv_working_set
+
+__all__ = ["check_plan", "DEFAULT_VMEM_LIMIT"]
+
+DEFAULT_VMEM_LIMIT = 64 * 1024 * 1024      # matches plan_conv_blocks
+
+
+def _covers_exactly(grid: int, block: int, extent: int) -> bool:
+    """grid x block tiles ``extent`` exactly once: enough blocks to cover
+    it, and the last block is not entirely out of range."""
+    return grid * block >= extent and (grid - 1) * block < extent
+
+
+def check_plan(conv: ConvLoopNest, plan: ConvBlockPlan,
+               vmem_limit: int = DEFAULT_VMEM_LIMIT,
+               where: str = "plan") -> Report:
+    """Prove ``plan`` is a legal fold geometry for ``conv``."""
+    rep = Report()
+    nf_b, c_b, p_b = plan.nf_block, plan.c_block, plan.p_block
+    g_nf, g_c, g_p = plan.grid
+
+    if plan.groups != conv.groups:
+        rep.add("plan.groups-mismatch", where,
+                f"plan solved for G={plan.groups} but the nest has "
+                f"G={conv.groups}; group divisibility invariants differ")
+        return rep      # nothing below is meaningful across group structures
+
+    if min(nf_b, c_b, p_b, g_nf, g_c, g_p) < 1:
+        rep.add("plan.degenerate", where,
+                f"non-positive block/grid extent: blocks=({nf_b}, {c_b}, "
+                f"{p_b}), grid={plan.grid}")
+        return rep
+
+    dw = conv.depthwise
+    # the channel block spans global C for depthwise (channels are
+    # independent), one group's C/G slice otherwise
+    c_span = conv.c if dw else conv.cg
+
+    if dw:
+        if nf_b != c_b:
+            rep.add("plan.depthwise-shape", where,
+                    f"depthwise filters ride the channel block but "
+                    f"nf_block={nf_b} != c_block={c_b}")
+        if g_nf != 1:
+            rep.add("plan.depthwise-shape", where,
+                    f"depthwise has no filter folds (one filter per "
+                    f"channel) but grid has {g_nf} nf folds")
+    else:
+        if conv.groups > 1 and conv.nfg % nf_b:
+            rep.add("plan.group-straddle", where,
+                    f"nf_block={nf_b} does not divide N_F/G={conv.nfg}: a "
+                    f"filter fold would straddle a group boundary")
+        if conv.groups > 1 and conv.cg % c_b:
+            rep.add("plan.group-straddle", where,
+                    f"c_block={c_b} does not divide C/G={conv.cg}: a depth "
+                    f"fold would mix channels from two group reductions")
+        if (conv.groups == 1 and conv.nf >= 8 and nf_b % 8
+                and nf_b != conv.nf):
+            # nf_b == nf is the clamped-to-extent case: a ragged N_F
+            # (e.g. 10 filters) legally clamps the fold to the extent
+            rep.add("plan.mxu-align", where,
+                    f"nf_block={nf_b} is not MXU-lane aligned (want a "
+                    f"multiple of 8 when N_F={conv.nf} >= 8): filter "
+                    f"lanes would go idle")
+
+    # grid/fold coverage arithmetic: every (N_F, C, P) element is owned by
+    # exactly one fold.  The nf grid axis spans all G groups' filter folds.
+    if dw:
+        axes = (("C", g_c, c_b, conv.c), ("P", g_p, p_b, conv.p))
+    elif conv.groups > 1:
+        # per-group folds: g_nf spans G groups' nf folds exactly
+        if conv.nfg % nf_b == 0 and g_nf != conv.groups * (conv.nfg // nf_b):
+            rep.add("plan.grid-coverage", where,
+                    f"nf grid axis has {g_nf} folds but G * (N_F/G / "
+                    f"nf_block) = {conv.groups * (conv.nfg // nf_b)}")
+        axes = (("C/G", g_c, c_b, conv.cg), ("P", g_p, p_b, conv.p))
+    else:
+        axes = (("N_F", g_nf, nf_b, conv.nf), ("C", g_c, c_b, conv.c),
+                ("P", g_p, p_b, conv.p))
+    for name, g, b, extent in axes:
+        if not _covers_exactly(g, b, extent):
+            want = math.ceil(extent / b)
+            rep.add("plan.grid-coverage", where,
+                    f"{name} axis: {g} folds x {b}-block covers "
+                    f"[{(g - 1) * b}, {g * b}) but the extent is {extent} "
+                    f"(want {want} folds): elements would be "
+                    f"{'missed' if g * b < extent else 'computed twice'}")
+
+    # clamp idempotence: a plan describing *this* layer must be a fixed
+    # point of clamped() at the layer's own dims (cache reuse clamps a
+    # larger-geometry plan down; an unclamped plan reaching the kernel
+    # means the engine skipped that step)
+    clamped = plan.clamped(conv.nf, conv.c, conv.p)
+    if (clamped.nf_block, clamped.c_block, clamped.p_block, clamped.grid) \
+            != (nf_b, c_b, p_b, plan.grid):
+        rep.add("plan.not-clamped", where,
+                f"plan is not clamped to the nest's dims: blocks "
+                f"({nf_b}, {c_b}, {p_b}) grid {plan.grid} != clamped "
+                f"({clamped.nf_block}, {clamped.c_block}, "
+                f"{clamped.p_block}) grid {clamped.grid}")
+
+    # VMEM residency — recompute the working set from the (possibly
+    # clamped) blocks; plan.vmem_bytes is the *solve-time* estimate and is
+    # deliberately not trusted here
+    ws = conv_working_set(conv, nf_b, c_b, p_b)
+    if ws > vmem_limit:
+        rep.add("plan.vmem-overflow", where,
+                f"working set {ws / 2**20:.1f} MiB exceeds the "
+                f"{vmem_limit / 2**20:.0f} MiB VMEM limit: the kernel "
+                f"cannot allocate its folds")
+    elif ws > vmem_limit // 2:
+        # legal (autotune candidates trade double-buffer headroom for
+        # bigger folds) but worth surfacing
+        rep.add("plan.vmem-pressure", where,
+                f"working set {ws / 2**20:.1f} MiB exceeds the planner's "
+                f"half-capacity target ({vmem_limit / 2 / 2**20:.0f} MiB); "
+                f"Pallas double-buffering headroom is reduced",
+                severity=WARNING)
+    return rep

@@ -777,6 +777,58 @@ class CompiledNetwork:
         return "\n".join(lines)
 
 
+# --------------------------------------------------------------------------
+# static verification hooks (repro.analysis), memoized per geometry
+# --------------------------------------------------------------------------
+
+# schedules already proven this process: keyed on everything the checks
+# read, so the verify=True default costs one lookup per layer after the
+# first compile of a geometry.  Imports are lazy to keep the engine's
+# import graph acyclic.
+_VERIFIED_SCHEDULES: Dict[Tuple, bool] = {}
+
+
+def _verify_graph(original, fused_graph, fused: bool) -> None:
+    """Structural lint (+ fusion-legality diff when the fusion pass ran).
+    Shape errors stay the walk's own ``GraphError``s — the lint here is
+    params-free so it can never preempt them."""
+    from repro.analysis.graph_check import check_fusion, lint_graph
+    from repro.analysis.report import FoldLintError
+    rep = lint_graph(fused_graph)
+    errors = rep.errors
+    if fused:
+        errors = errors + check_fusion(original, fused_graph).errors
+    if errors:
+        raise FoldLintError(errors)
+
+
+def _verify_schedule(name: str, cv: ConvLoopNest, sched: "ConvSchedule",
+                     epi, groups: int) -> None:
+    """Prove one conv layer's schedule before its kernel is bound: the
+    clamped block plan's invariants, then the full launch geometry's
+    index-map coverage/race analysis (``FoldKernelSpec``)."""
+    plan = sched.plan.clamped(cv.nf, cv.c, cv.p)
+    key = (sched.key, sched.dataflow, plan, epi, cv.n,
+           cv.padded_x, cv.padded_y)
+    if key in _VERIFIED_SCHEDULES:
+        return
+    from repro.analysis.index_check import check_kernel_spec
+    from repro.analysis.plan_check import check_plan
+    from repro.analysis.report import FoldLintError
+    from repro.kernels.conv2d_ws import fold_kernel_spec
+    rep = check_plan(cv, plan, where=name)
+    if rep.ok:
+        spec = fold_kernel_spec(
+            (cv.n, cv.c, cv.padded_x, cv.padded_y),
+            (cv.nf, cv.c // groups, cv.r, cv.s),
+            stride=cv.stride, plan=plan, dataflow=sched.dataflow,
+            epilogue=epi, groups=groups)
+        rep.extend(check_kernel_spec(spec, where=name))
+    if not rep.ok:
+        raise FoldLintError(rep.errors)
+    _VERIFIED_SCHEDULES[key] = True
+
+
 def compile_network(params: Dict[str, Any],
                     graph,
                     input_shape: Tuple[int, int, int, int],
@@ -789,7 +841,8 @@ def compile_network(params: Dict[str, Any],
                     autotune: bool = False,
                     tuning_path: Optional[str] = None,
                     autotune_reps: int = 3,
-                    autotune_timer: Optional[Callable] = None
+                    autotune_timer: Optional[Callable] = None,
+                    verify: bool = True
                     ) -> CompiledNetwork:
     """Lower a streaming graph into a static fold schedule + jitted forward.
 
@@ -827,6 +880,15 @@ def compile_network(params: Dict[str, Any],
     measured timings (``autotune_for``): pay-once per ``ScheduleKey``, and
     with ``tuning_path`` the results round-trip through JSON so later
     sessions skip the measurements entirely.
+
+    ``verify=True`` (the default) statically verifies the lowering with
+    ``repro.analysis`` before it runs: the graph is linted (and, when the
+    fusion pass ran, diffed against an independent re-derivation of the
+    fusion rules), and every pallas-mode conv schedule's block plan and
+    kernel index maps are proven in-bounds / race-free / exactly-covering.
+    Error-severity findings raise ``FoldLintError``.  Verification is
+    memoized per schedule geometry (``_VERIFIED_SCHEDULES``), so the
+    steady-state cost of the default is one dict lookup per layer.
     """
     # explicit None-check: an empty ScheduleCache is falsy (len 0) but
     # must still be used, so its stats/schedules reach the caller
@@ -836,7 +898,10 @@ def compile_network(params: Dict[str, Any],
     if autotune and tuning_path and os.path.exists(tuning_path):
         cache.load_tuning(tuning_path)
     fused = fuse_epilogues and mode == "pallas"
-    g = fuse_graph(as_graph(graph)) if fused else as_graph(graph)
+    base_graph = as_graph(graph)
+    g = fuse_graph(base_graph) if fused else base_graph
+    if verify:
+        _verify_graph(base_graph, g, fused)
 
     # -- shape-inferring walk: one step per node, schedules built eagerly --
     shapes: Dict[str, Tuple[int, ...]] = {g.input: tuple(input_shape)}
@@ -896,6 +961,8 @@ def compile_network(params: Dict[str, Any],
                     epilogue=epi, timer=autotune_timer)
             else:
                 sched = cache.schedule_for(cv)
+            if verify and mode == "pallas":
+                _verify_schedule(nd.name, cv, sched, epi, groups)
             layer_schedules.append((nd.name, sched))
             po, qo = epilogue_out_hw(nd.epilogue, cv.p, cv.q)
             shapes[nd.name] = (n_, nf, po, qo)
@@ -1058,7 +1125,8 @@ class BucketCompiler:
                  fuse_epilogues: bool = True, autotune: bool = False,
                  tuning_path: Optional[str] = None,
                  autotune_reps: int = 3,
-                 autotune_timer: Optional[Callable] = None):
+                 autotune_timer: Optional[Callable] = None,
+                 verify: bool = True):
         self.params = params
         self.graph = as_graph(graph)
         self.img = int(img)
@@ -1072,6 +1140,7 @@ class BucketCompiler:
         self.tuning_path = tuning_path
         self.autotune_reps = autotune_reps
         self.autotune_timer = autotune_timer
+        self.verify = verify
         self._nets: Dict[int, CompiledNetwork] = {}
 
     @property
@@ -1097,7 +1166,7 @@ class BucketCompiler:
                 jit=self.jit, fuse_epilogues=self.fuse_epilogues,
                 autotune=self.autotune, tuning_path=self.tuning_path,
                 autotune_reps=self.autotune_reps,
-                autotune_timer=self.autotune_timer)
+                autotune_timer=self.autotune_timer, verify=self.verify)
             self._nets[batch] = net
         return net
 

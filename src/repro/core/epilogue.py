@@ -57,14 +57,26 @@ class Epilogue:
     scale: bool = False
     relu6: bool = False
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
+        conflicts = self.conflicts()
+        if conflicts:
+            raise ValueError(conflicts[0])
+
+    def conflicts(self) -> Tuple[str, ...]:
+        """Every internal-consistency rule this epilogue violates (empty
+        when valid).  ``__post_init__`` raises on the first one, but a
+        mutated frozen instance (``object.__setattr__``) can smuggle a
+        conflict state past construction — the graph linter
+        (``repro/analysis/graph_check.py``) re-checks via this method."""
+        out = []
         if self.pool not in (None, "max2"):
-            raise ValueError(f"unknown pool {self.pool!r} (want None|'max2')")
+            out.append(f"unknown pool {self.pool!r} (want None|'max2')")
         if self.residual and self.pool:
-            raise ValueError("Epilogue(residual=True) cannot fuse a pool: "
-                             "the shortcut adds to the un-pooled output")
+            out.append("Epilogue(residual=True) cannot fuse a pool: "
+                       "the shortcut adds to the un-pooled output")
         if self.relu and self.relu6:
-            raise ValueError("relu and relu6 are exclusive activations")
+            out.append("relu and relu6 are exclusive activations")
+        return tuple(out)
 
     @property
     def identity(self) -> bool:

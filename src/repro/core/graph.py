@@ -197,7 +197,8 @@ class StreamGraph:
                          groups=DEPTHWISE)
 
     def batchnorm(self, name: Optional[str] = None,
-                  src: Optional[str] = None, *, param: str = None) -> str:
+                  src: Optional[str] = None, *,
+                  param: Optional[str] = None) -> str:
         """Inference batch-norm: ``y*scale + shift`` with scale/shift
         folded from ``params[param]`` ({gamma, beta, mean, var}) at trace
         time (``bn_scale_shift``).  The fusion pass melts it into the

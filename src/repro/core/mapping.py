@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from jax.sharding import PartitionSpec
 
@@ -36,6 +36,7 @@ from repro.core.loopnest import ConvLoopNest
 __all__ = [
     "SpatialMap",
     "TemporalMap",
+    "Directive",
     "MappingPlan",
     "ConvBlockPlan",
     "conv_working_set",
@@ -73,12 +74,15 @@ class TemporalMap:
         return f"TemporalMap({self.dim}, tile={self.tile})"
 
 
+Directive = Union[SpatialMap, TemporalMap]
+
+
 @dataclasses.dataclass(frozen=True)
 class MappingPlan:
     """A complete binding of a loop nest's dims to space and time."""
     name: str
     dims: Dict[str, int]                      # loop extents
-    directives: Tuple[object, ...]            # Spatial/Temporal maps, ordered
+    directives: Tuple[Directive, ...]         # Spatial/Temporal maps, ordered
 
     def spatial(self) -> List[SpatialMap]:
         return [d for d in self.directives if isinstance(d, SpatialMap)]

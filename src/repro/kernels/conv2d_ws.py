@@ -57,8 +57,9 @@ pre-pads spatially (``ops.py``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +71,8 @@ from repro.core.loopnest import ConvLoopNest
 from repro.core.mapping import (WS_ACC_BYTES_LIMIT, ConvBlockPlan,
                                 plan_conv_blocks)
 
-__all__ = ["conv2d_folded", "default_plan", "DATAFLOWS"]
+__all__ = ["conv2d_folded", "default_plan", "DATAFLOWS",
+           "OperandSpec", "FoldKernelSpec", "fold_kernel_spec"]
 
 DATAFLOWS = ("weight_stationary", "output_stationary", "depthwise")
 
@@ -244,56 +246,339 @@ def _vector_block(nf: int, nf_pad: int, epi: Epilogue, bias, scale, shift
     return out
 
 
-def _depthwise_call(x_padded, w, bias, scale, shift, residual,
-                    epi: Epilogue, stride: int,
-                    interpret: bool, out_dtype,
-                    c_b: int, p_b: int, g_c: int, g_p: int) -> jnp.ndarray:
-    """Bind the dedicated depthwise kernel: grid (N, c folds, p folds),
-    channels padded to the block multiple (each padded channel is an
-    independent dead lane), the epilogue flushed every grid step."""
-    n, c, xp_, yp_ = x_padded.shape
-    nf, _, r, s = w.shape                       # nf == c (checked upstream)
+# --------------------------------------------------------------------------
+# Index maps as inspectable data
+# --------------------------------------------------------------------------
+# Every BlockSpec index map below is a *named module-level function* (bound
+# with ``functools.partial`` where group geometry applies) rather than an
+# inline closure, so the static analyzer (``repro/analysis/index_check.py``)
+# can enumerate grid x index-map products and prove coverage / race freedom
+# on the exact callables the kernel binds.  Grid argument orders:
+#   weight_stationary / psum : (b, f, cc, pp)   -- grid (N, nf, c, p)
+#   output_stationary        : (b, f, pp, cc)   -- grid (N, nf, p, c)
+#   depthwise                : (b, cc, pp)      -- grid (N, c, p)
+
+def _ix_ws_x(b, f, cc, pp, *, nfg_folds: int, cg_folds: int):
+    """Streamed input block: channel fold ``cc`` within the group the
+    current filter fold ``f`` belongs to.  Dense layers are the G=1 case
+    (``nfg_folds`` = all nf folds, so the group index is always 0)."""
+    return (b, (f // nfg_folds) * cg_folds + cc, 0, 0)
+
+
+def _ix_ws_w(b, f, cc, pp):
+    """Weight fold: globally filter-indexed, per-group channel-indexed."""
+    return (f, cc, 0, 0)
+
+
+def _ix_ws_vec(b, f, cc, pp):
+    return (f, 0)
+
+
+def _ix_ws_res(b, f, cc, pp):
+    """Residual rides full-height, resident like the WS accumulator."""
+    return (b, f, 0, 0)
+
+
+def _ix_ws_out(b, f, cc, pp):
+    """Constant along (c, p): the finished output stays resident in VMEM
+    for the whole sweep and hits HBM exactly once.  P-fold revisits write
+    disjoint in-block row slices (``inner_sliced_axes``)."""
+    return (b, f, 0, 0)
+
+
+def _ix_os_x(b, f, pp, cc, *, nfg_folds: int, cg_folds: int):
+    return (b, (f // nfg_folds) * cg_folds + cc, 0, 0)
+
+
+def _ix_os_w(b, f, pp, cc):
+    return (f, cc, 0, 0)
+
+
+def _ix_os_vec(b, f, pp, cc):
+    return (f, 0)
+
+
+def _ix_os_res(b, f, pp, cc):
+    return (b, f, pp, 0)
+
+
+def _ix_os_out(b, f, pp, cc):
+    """Constant along c only: the depth sweep accumulates into the
+    block-sized scratch and writes the block once."""
+    return (b, f, pp, 0)
+
+
+def _ix_dw_x(b, cc, pp):
+    return (b, cc, 0, 0)
+
+
+def _ix_dw_w(b, cc, pp):
+    return (cc, 0, 0, 0)
+
+
+def _ix_dw_vec(b, cc, pp):
+    return (cc, 0)
+
+
+def _ix_dw_res(b, cc, pp):
+    return (b, cc, pp, 0)
+
+
+def _ix_dw_out(b, cc, pp):
+    return (b, cc, pp, 0)
+
+
+def _ix_psum_out(b, f, cc, pp):
+    """One partial-sum fold per depth fold: cc addresses a leading psum
+    axis, so every grid point owns a distinct output block (no revisits)."""
+    return (cc, b, f, pp, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSpec:
+    """One pallas_call operand: its block shape, the (padded) array shape
+    the kernel binds, and the BlockSpec index map as an inspectable
+    callable.  ``role`` is one of x | w | vec | residual | out."""
+    role: str
+    block: Tuple[int, ...]
+    array_shape: Tuple[int, ...]
+    index_map: Callable[..., Tuple[int, ...]]
+
+    def block_spec(self) -> pl.BlockSpec:
+        return pl.BlockSpec(self.block, self.index_map)
+
+
+@dataclasses.dataclass(frozen=True)
+class FoldKernelSpec:
+    """The complete static description of one fold-streamed conv kernel
+    launch: resolved dataflow, grid, and every operand's BlockSpec geometry
+    as data.  ``conv2d_folded`` consumes it to bind the pallas_call;
+    ``repro/analysis`` consumes it to prove coverage, in-bounds access, and
+    single-writer discipline without tracing anything.
+
+    ``reduction_axis`` is the depth-fold grid axis (the only axis allowed
+    to revisit the accumulator/output block); ``inner_sliced_axes`` are
+    grid axes whose output revisits are *disjoint in-block sub-slices*
+    (the WS kernel's ``pl.ds(row0, p_block)`` rows), not races.
+    """
+    dataflow: str                       # resolved (post-fallback)
+    requested: str                      # dataflow as requested by caller
+    grid: Tuple[int, ...]
+    grid_axes: Tuple[str, ...]          # loop-nest name per grid axis
+    reduction_axis: Optional[int]
+    inner_sliced_axes: Tuple[int, ...]
+    inputs: Tuple[OperandSpec, ...]
+    output: OperandSpec
+    epilogue: Epilogue
+    plan: ConvBlockPlan                 # clamped to this layer's dims
+    groups: int
+    nfg_folds: int                      # nf folds per group (g_nf / G)
+    cg_folds: int                       # c folds per group (= depth folds)
+    nf: int
+    c: int
+    p: int
+    q: int
+    r: int
+    s: int
+    stride: int
+    nf_pad: int
+    c_pad: int
+    p_pad: int
+    x_rows: int                         # padded input rows the kernel sees
+    p_block: int                        # post pool-even bump
+    p_valid: int
+    q_valid: int
+
+
+def fold_kernel_spec(x_shape: Tuple[int, int, int, int],
+                     w_shape: Tuple[int, int, int, int], *,
+                     stride: int = 1,
+                     plan: Optional[ConvBlockPlan] = None,
+                     dataflow: str = "weight_stationary",
+                     epilogue: Optional[Epilogue] = None,
+                     groups: int = 1) -> FoldKernelSpec:
+    """Solve the complete launch geometry for a fold-streamed conv — block
+    clamping, the pool-even P bump, padding, and the WS->psum/OS VMEM
+    fallback — and return it as inspectable data.  Pure shape arithmetic:
+    no arrays are touched, so the analyzer can call it on any layer."""
+    n, c, xp_, yp_ = x_shape
+    nf, cw, r, s = w_shape
+    assert c == cw * groups, (c, cw, groups)
+    assert nf % groups == 0, (nf, groups)
     p = (xp_ - r) // stride + 1
     q = (yp_ - s) // stride + 1
-    c_pad, p_pad = g_c * c_b, g_p * p_b
-    rows_needed = (p_pad - 1) * stride + r
-    if c_pad != c or rows_needed > xp_:
-        x_padded = jnp.pad(x_padded, ((0, 0), (0, c_pad - c),
-                                      (0, max(rows_needed - xp_, 0)), (0, 0)))
-    if c_pad != c:
-        w = jnp.pad(w, ((0, c_pad - c), (0, 0), (0, 0), (0, 0)))
-    xp_r = x_padded.shape[2]
-    b_arr = _vector_block(nf, c_pad, epi, bias, scale, shift)
-    if epi.residual and (c_pad != c or p_pad != p):
-        residual = jnp.pad(residual, ((0, 0), (0, c_pad - c),
-                                      (0, p_pad - p), (0, 0)))
+    epi = epilogue or Epilogue()
+    if epi.pool == "max2" and (p < 2 or q < 2):
+        raise ValueError(f"cannot fuse 2x2 pool into a {p}x{q} output")
+    requested = dataflow
+    if dataflow == "depthwise" and not (groups > 1 and groups == c == nf):
+        raise ValueError("dataflow='depthwise' needs groups == C == N_F, "
+                         f"got groups={groups}, C={c}, N_F={nf}")
+    if dataflow not in DATAFLOWS + ("weight_stationary_psum",):
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+    if dataflow == "weight_stationary_psum":
+        if not epi.identity:
+            raise ValueError("the legacy psum dataflow has no fused epilogue")
+        if groups > 1:
+            raise ValueError("the legacy psum dataflow predates grouped "
+                             "convolution")
+    if plan is None or plan.groups != groups:
+        # a plan solved for a different group structure cannot tile this
+        # layer (divisibility invariants differ) — re-solve
+        cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s,
+                          x=xp_, y=yp_, stride=stride, pad=0, groups=groups)
+        plan = plan_conv_blocks(cv)
+    plan = plan.clamped(nf, c, p)
+    nf_b, c_b, p_b = plan.nf_block, plan.c_block, plan.p_block
+    g_nf, g_c, g_p = plan.grid
     pooled = epi.pool == "max2"
+    if pooled and p_b % 2:
+        # pool windows must not straddle P-fold boundaries
+        p_b += 1
+        g_p = -(-p // p_b)
+    p_valid, q_valid = epilogue_out_hw(epi, p, q)
+    q_o = q // 2 if pooled else q
+
+    if dataflow == "depthwise":
+        c_pad, p_pad = g_c * c_b, g_p * p_b
+        rows_needed = (p_pad - 1) * stride + r
+        x_rows = max(xp_, rows_needed)
+        p_b_o = p_b // 2 if pooled else p_b
+        p_o_pad = p_pad // 2 if pooled else p_pad
+        inputs = [
+            OperandSpec("x", (1, c_b, x_rows, yp_),
+                        (n, c_pad, x_rows, yp_), _ix_dw_x),
+            OperandSpec("w", (c_b, 1, r, s), (c_pad, 1, r, s), _ix_dw_w),
+            OperandSpec("vec", (c_b, 3), (c_pad, 3), _ix_dw_vec),
+        ]
+        if epi.residual:
+            inputs.append(OperandSpec("residual", (1, c_b, p_b, q),
+                                      (n, c_pad, p_pad, q), _ix_dw_res))
+        out = OperandSpec("out", (1, c_b, p_b_o, q_o),
+                          (n, c_pad, p_o_pad, q_o), _ix_dw_out)
+        return FoldKernelSpec(
+            dataflow="depthwise", requested=requested,
+            grid=(n, g_c, g_p), grid_axes=("n", "c", "p"),
+            reduction_axis=None, inner_sliced_axes=(),
+            inputs=tuple(inputs), output=out, epilogue=epi, plan=plan,
+            groups=groups, nfg_folds=1, cg_folds=g_c,
+            nf=nf, c=c, p=p, q=q, r=r, s=s, stride=stride,
+            nf_pad=c_pad, c_pad=c_pad, p_pad=p_pad, x_rows=x_rows,
+            p_block=p_b, p_valid=p_valid, q_valid=q_valid)
+
+    # Pad every tiled dim to an exact block multiple: zero channels/filters
+    # contribute nothing to the accumulation, and extra bottom rows only
+    # produce out-of-range outputs that are sliced away.  This keeps the
+    # in-kernel dynamic_slice un-clamped (fold geometry stays exact).
+    # Aligned layers skip the pads entirely (no copy).  Grouped layers are
+    # exactly tiled by construction (blocks divide the per-group extents),
+    # so only the bottom-row pad can apply.
+    if groups > 1:
+        nf_pad, c_pad = nf, c
+        g_nfg = g_nf // groups            # nf folds per group
+    else:
+        nf_pad, c_pad = g_nf * nf_b, g_c * c_b
+        g_nfg = g_nf
+    p_pad = g_p * p_b
+    rows_needed = (p_pad - 1) * stride + r
+    x_rows = max(xp_, rows_needed)
+
+    # a fused residual rides along full-height, resident like the
+    # accumulator — it doubles the WS footprint the spill check must price
+    ws_resident = nf_b * p_pad * q * 4 * (2 if epi.residual else 1)
+    if (dataflow == "weight_stationary"
+            and ws_resident > WS_ACC_BYTES_LIMIT):
+        # the full-height fp32 accumulator (+ resident residual) would not
+        # fit VMEM: fall back to psum staging (or to the block-accumulator
+        # OS kernel when an epilogue must flush in-kernel, and always for
+        # grouped layers — the psum formulation predates groups) —
+        # mirrored by the spill price in
+        # ``core/engine.py:dataflow_traffic_bytes``
+        dataflow = ("weight_stationary_psum"
+                    if epi.identity and groups == 1
+                    else "output_stationary")
+
+    if dataflow == "weight_stationary_psum":
+        inputs = [
+            OperandSpec("x", (1, c_b, x_rows, yp_), (n, c_pad, x_rows, yp_),
+                        functools.partial(_ix_ws_x, nfg_folds=g_nfg,
+                                          cg_folds=g_c)),
+            OperandSpec("w", (nf_b, c_b, r, s),
+                        (nf_pad, c_pad // groups, r, s), _ix_ws_w),
+        ]
+        # out: one partial-sum fold per depth fold (paper Fig 5, staged in
+        # HBM — the formulation the in-kernel reduction replaces)
+        out = OperandSpec("out", (1, 1, nf_b, p_b, q),
+                          (g_c, n, nf_pad, p_pad, q), _ix_psum_out)
+        return FoldKernelSpec(
+            dataflow="weight_stationary_psum", requested=requested,
+            grid=(n, g_nf, g_c, g_p), grid_axes=("n", "nf", "c", "p"),
+            reduction_axis=None, inner_sliced_axes=(),
+            inputs=tuple(inputs), output=out, epilogue=epi, plan=plan,
+            groups=groups, nfg_folds=g_nfg, cg_folds=g_c,
+            nf=nf, c=c, p=p, q=q, r=r, s=s, stride=stride,
+            nf_pad=nf_pad, c_pad=c_pad, p_pad=p_pad, x_rows=x_rows,
+            p_block=p_b, p_valid=p_valid, q_valid=q_valid)
+
+    if dataflow == "weight_stationary":
+        p_o_pad = p_pad // 2 if pooled else p_pad
+        inputs = [
+            OperandSpec("x", (1, c_b, x_rows, yp_), (n, c_pad, x_rows, yp_),
+                        functools.partial(_ix_ws_x, nfg_folds=g_nfg,
+                                          cg_folds=g_c)),
+            OperandSpec("w", (nf_b, c_b, r, s),
+                        (nf_pad, c_pad // groups, r, s), _ix_ws_w),
+            OperandSpec("vec", (nf_b, 3), (nf_pad, 3), _ix_ws_vec),
+        ]
+        if epi.residual:
+            # resident like the output: constant along (c, p)
+            inputs.append(OperandSpec("residual", (1, nf_b, p_pad, q),
+                                      (n, nf_pad, p_pad, q), _ix_ws_res))
+        out = OperandSpec("out", (1, nf_b, p_o_pad, q_o),
+                          (n, nf_pad, p_o_pad, q_o), _ix_ws_out)
+        return FoldKernelSpec(
+            dataflow="weight_stationary", requested=requested,
+            grid=(n, g_nf, g_c, g_p), grid_axes=("n", "nf", "c", "p"),
+            reduction_axis=2, inner_sliced_axes=(3,),
+            inputs=tuple(inputs), output=out, epilogue=epi, plan=plan,
+            groups=groups, nfg_folds=g_nfg, cg_folds=g_c,
+            nf=nf, c=c, p=p, q=q, r=r, s=s, stride=stride,
+            nf_pad=nf_pad, c_pad=c_pad, p_pad=p_pad, x_rows=x_rows,
+            p_block=p_b, p_valid=p_valid, q_valid=q_valid)
+
+    # output_stationary
     p_b_o = p_b // 2 if pooled else p_b
     p_o_pad = p_pad // 2 if pooled else p_pad
-    q_o = q // 2 if pooled else q
-    p_valid, q_valid = epilogue_out_hw(epi, p, q)
-    kern = functools.partial(_dw_kernel, r=r, s=s, stride=stride,
-                             p_block=p_b, q=q, epi=epi)
-    in_specs = [
-        pl.BlockSpec((1, c_b, xp_r, yp_), lambda b, cc, pp: (b, cc, 0, 0)),
-        pl.BlockSpec((c_b, 1, r, s), lambda b, cc, pp: (cc, 0, 0, 0)),
-        pl.BlockSpec((c_b, 3), lambda b, cc, pp: (cc, 0)),
+    inputs = [
+        OperandSpec("x", (1, c_b, x_rows, yp_), (n, c_pad, x_rows, yp_),
+                    functools.partial(_ix_os_x, nfg_folds=g_nfg,
+                                      cg_folds=g_c)),
+        OperandSpec("w", (nf_b, c_b, r, s),
+                    (nf_pad, c_pad // groups, r, s), _ix_os_w),
+        OperandSpec("vec", (nf_b, 3), (nf_pad, 3), _ix_os_vec),
     ]
-    args = [x_padded, w, b_arr]
     if epi.residual:
-        in_specs.append(pl.BlockSpec((1, c_b, p_b, q),
-                                     lambda b, cc, pp: (b, cc, pp, 0)))
-        args.append(residual)
-    out = pl.pallas_call(
-        kern,
-        grid=(n, g_c, g_p),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, c_b, p_b_o, q_o),
-                               lambda b, cc, pp: (b, cc, pp, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, c_pad, p_o_pad, q_o), out_dtype),
-        interpret=interpret,
-    )(*args)
-    return out[:, :nf, :p_valid, :q_valid]
+        inputs.append(OperandSpec("residual", (1, nf_b, p_b, q),
+                                  (n, nf_pad, p_pad, q), _ix_os_res))
+    out = OperandSpec("out", (1, nf_b, p_b_o, q_o),
+                      (n, nf_pad, p_o_pad, q_o), _ix_os_out)
+    return FoldKernelSpec(
+        dataflow="output_stationary", requested=requested,
+        grid=(n, g_nf, g_p, g_c), grid_axes=("n", "nf", "p", "c"),
+        reduction_axis=3, inner_sliced_axes=(),
+        inputs=tuple(inputs), output=out, epilogue=epi, plan=plan,
+        groups=groups, nfg_folds=g_nfg, cg_folds=g_c,
+        nf=nf, c=c, p=p, q=q, r=r, s=s, stride=stride,
+        nf_pad=nf_pad, c_pad=c_pad, p_pad=p_pad, x_rows=x_rows,
+        p_block=p_b, p_valid=p_valid, q_valid=q_valid)
+
+
+def _pad_to(arr: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Zero-pad ``arr`` up to ``shape`` (no-op when already aligned)."""
+    pads = tuple((0, t - d) for d, t in zip(arr.shape, shape))
+    if any(hi for _, hi in pads):
+        return jnp.pad(arr, pads)
+    return arr
 
 
 def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
@@ -346,180 +631,63 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
         if tuple(residual.shape) != (n, nf, p, q):
             raise ValueError(f"residual shape {tuple(residual.shape)} != "
                              f"conv output {(n, nf, p, q)}")
-    if epi.pool == "max2" and (p < 2 or q < 2):
-        raise ValueError(f"cannot fuse 2x2 pool into a {p}x{q} output")
     if interpret is None:
         from repro.core.engine import pallas_interpret_default
         interpret = pallas_interpret_default()
-    if dataflow == "depthwise" and not (groups > 1 and groups == c == nf):
-        raise ValueError("dataflow='depthwise' needs groups == C == N_F, "
-                         f"got groups={groups}, C={c}, N_F={nf}")
-    if plan is None or plan.groups != groups:
-        # a plan solved for a different group structure cannot tile this
-        # layer (divisibility invariants differ) — re-solve
-        cv = ConvLoopNest(n=n, nf=nf, c=c, r=r, s=s,
-                          x=xp_, y=yp_, stride=stride, pad=0, groups=groups)
-        plan = plan_conv_blocks(cv)
-    plan = plan.clamped(nf, c, p)
-    nf_b, c_b, p_b = plan.nf_block, plan.c_block, plan.p_block
-    g_nf, g_c, g_p = plan.grid
-    if epi.pool == "max2" and p_b % 2:
-        # pool windows must not straddle P-fold boundaries
-        p_b += 1
-        g_p = -(-p // p_b)
 
-    if dataflow == "depthwise":
-        return _depthwise_call(x_padded, w, bias, scale, shift, residual,
-                               epi, stride, interpret, out_dtype,
-                               c_b, p_b, g_c, g_p)
+    spec = fold_kernel_spec(tuple(x_padded.shape), tuple(w.shape),
+                            stride=stride, plan=plan, dataflow=dataflow,
+                            epilogue=epi, groups=groups)
+    nf_b = spec.plan.nf_block
+    p_b, q_v = spec.p_block, spec.q_valid
 
-    # Pad every tiled dim to an exact block multiple: zero channels/filters
-    # contribute nothing to the accumulation, and extra bottom rows only
-    # produce out-of-range outputs that are sliced away.  This keeps the
-    # in-kernel dynamic_slice un-clamped (fold geometry stays exact).
-    # Aligned layers skip the pads entirely (no copy).  Grouped layers are
-    # exactly tiled by construction (blocks divide the per-group extents),
-    # so only the bottom-row pad can apply.
-    if groups > 1:
-        nf_pad, c_pad = nf, c
-        g_nfg = g_nf // groups            # nf folds per group
-    else:
-        nf_pad, c_pad = g_nf * nf_b, g_c * c_b
-        g_nfg = g_nf
-    p_pad = g_p * p_b
-    rows_needed = (p_pad - 1) * stride + r
-    if c_pad != c or rows_needed > xp_:
-        x_padded = jnp.pad(x_padded, ((0, 0), (0, c_pad - c),
-                                      (0, max(rows_needed - xp_, 0)), (0, 0)))
-    if nf_pad != nf or c_pad != c:
-        w = jnp.pad(w, ((0, nf_pad - nf), (0, (c_pad - c) // groups),
-                        (0, 0), (0, 0)))
-    xp_r = x_padded.shape[2]
+    arrays = {"x": x_padded, "w": w, "residual": residual}
+    args = []
+    for op in spec.inputs:
+        if op.role == "vec":
+            args.append(_vector_block(nf, op.array_shape[0], epi,
+                                      bias, scale, shift))
+        else:
+            args.append(_pad_to(arrays[op.role], op.array_shape))
+    in_specs = [op.block_spec() for op in spec.inputs]
+    out_shape = jax.ShapeDtypeStruct(spec.output.array_shape, out_dtype)
 
-    # a fused residual rides along full-height, resident like the
-    # accumulator — it doubles the WS footprint the spill check must price
-    ws_resident = nf_b * p_pad * q * 4 * (2 if epi.residual else 1)
-    if (dataflow == "weight_stationary"
-            and ws_resident > WS_ACC_BYTES_LIMIT):
-        # the full-height fp32 accumulator (+ resident residual) would not
-        # fit VMEM: fall back to psum staging (or to the block-accumulator
-        # OS kernel when an epilogue must flush in-kernel, and always for
-        # grouped layers — the psum formulation predates groups) —
-        # mirrored by the spill price in
-        # ``core/engine.py:dataflow_traffic_bytes``
-        dataflow = ("weight_stationary_psum"
-                    if epi.identity and groups == 1
-                    else "output_stationary")
+    if spec.dataflow == "depthwise":
+        kern = functools.partial(_dw_kernel, r=r, s=s, stride=stride,
+                                 p_block=p_b, q=q, epi=epi)
+        out = pl.pallas_call(
+            kern, grid=spec.grid, in_specs=in_specs,
+            out_specs=spec.output.block_spec(), out_shape=out_shape,
+            interpret=interpret,
+        )(*args)
+        return out[:, :nf, :spec.p_valid, :q_v]
 
-    if dataflow == "weight_stationary_psum":
-        if not epi.identity:
-            raise ValueError("the legacy psum dataflow has no fused epilogue")
-        if groups > 1:
-            raise ValueError("the legacy psum dataflow predates grouped "
-                             "convolution")
-        # out: one partial-sum fold per depth fold (paper Fig 5, staged in
-        # HBM — the formulation the in-kernel reduction replaces)
+    if spec.dataflow == "weight_stationary_psum":
         kern = functools.partial(_ws_psum_kernel, r=r, s=s, stride=stride,
                                  p_block=p_b, q=q)
         partial_sums = pl.pallas_call(
-            kern,
-            grid=(n, g_nf, g_c, g_p),
-            in_specs=[
-                pl.BlockSpec((1, c_b, xp_r, yp_),
-                             lambda b, f, cc, pp: (b, cc, 0, 0)),
-                pl.BlockSpec((nf_b, c_b, r, s),
-                             lambda b, f, cc, pp: (f, cc, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, 1, nf_b, p_b, q),
-                                   lambda b, f, cc, pp: (cc, b, f, pp, 0)),
-            out_shape=jax.ShapeDtypeStruct((g_c, n, nf_pad, p_pad, q),
-                                           out_dtype),
+            kern, grid=spec.grid, in_specs=in_specs,
+            out_specs=spec.output.block_spec(), out_shape=out_shape,
             interpret=interpret,
-        )(x_padded, w)
+        )(*args)
         # multi-depth reduce of the partial-sum folds, paid through HBM
         return partial_sums.sum(axis=0)[:, :nf, :p].astype(out_dtype)
 
-    if dataflow not in DATAFLOWS:
-        raise ValueError(f"unknown dataflow {dataflow!r}")
-
-    b_arr = _vector_block(nf, nf_pad, epi, bias, scale, shift)
-
-    if epi.residual and (nf_pad != nf or p_pad != p):
-        # zero-padded shortcut rows/filters align with the padded output
-        # blocks and are sliced away with them below
-        residual = jnp.pad(residual, ((0, 0), (0, nf_pad - nf),
-                                      (0, p_pad - p), (0, 0)))
-
-    pooled = epi.pool == "max2"
-    p_o_pad = p_pad // 2 if pooled else p_pad
-    q_o = q // 2 if pooled else q
-    p_valid, q_valid = epilogue_out_hw(epi, p, q)
-
-    if dataflow == "weight_stationary":
+    if spec.dataflow == "weight_stationary":
         kern = functools.partial(_ws_kernel, r=r, s=s, stride=stride,
-                                 p_block=p_b, q=q, n_c=g_c, epi=epi)
-        if groups > 1:
-            # the streamed channel block lives in the group the current
-            # filter fold belongs to: offset by (group index) * (per-group
-            # c folds).  The kernel body is group-oblivious.
-            x_index = lambda b, f, cc, pp: (b, (f // g_nfg) * g_c + cc, 0, 0)  # noqa: E731,E501
-        else:
-            x_index = lambda b, f, cc, pp: (b, cc, 0, 0)      # noqa: E731
-        in_specs = [
-            pl.BlockSpec((1, c_b, xp_r, yp_), x_index),
-            # weights are globally filter-indexed, per-group channel-
-            # indexed — (f, cc) addresses the right block in both cases
-            pl.BlockSpec((nf_b, c_b, r, s),
-                         lambda b, f, cc, pp: (f, cc, 0, 0)),
-            pl.BlockSpec((nf_b, 3), lambda b, f, cc, pp: (f, 0)),
-        ]
-        args = [x_padded, w, b_arr]
-        if epi.residual:
-            # resident like the output: constant along (c, p)
-            in_specs.append(pl.BlockSpec((1, nf_b, p_pad, q),
-                                         lambda b, f, cc, pp: (b, f, 0, 0)))
-            args.append(residual)
-        out = pl.pallas_call(
-            kern,
-            grid=(n, g_nf, g_c, g_p),
-            in_specs=in_specs,
-            # constant along (c, p): the finished output stays resident in
-            # VMEM for the whole sweep and hits HBM exactly once
-            out_specs=pl.BlockSpec((1, nf_b, p_o_pad, q_o),
-                                   lambda b, f, cc, pp: (b, f, 0, 0)),
-            out_shape=jax.ShapeDtypeStruct((n, nf_pad, p_o_pad, q_o),
-                                           out_dtype),
-            scratch_shapes=[pltpu.VMEM((nf_b, p_pad, q), jnp.float32)],
-            interpret=interpret,
-        )(*args)
+                                 p_block=p_b, q=q, n_c=spec.cg_folds,
+                                 epi=epi)
+        # full-height accumulator: the paper's reserved-column partial sums
+        scratch = pltpu.VMEM((nf_b, spec.p_pad, q), jnp.float32)
     else:  # output_stationary
-        p_b_o = p_b // 2 if pooled else p_b
         kern = functools.partial(_os_kernel, r=r, s=s, stride=stride,
-                                 p_block=p_b, q=q, n_c=g_c, epi=epi)
-        if groups > 1:
-            x_index = lambda b, f, pp, cc: (b, (f // g_nfg) * g_c + cc, 0, 0)  # noqa: E731,E501
-        else:
-            x_index = lambda b, f, pp, cc: (b, cc, 0, 0)      # noqa: E731
-        in_specs = [
-            pl.BlockSpec((1, c_b, xp_r, yp_), x_index),
-            pl.BlockSpec((nf_b, c_b, r, s),
-                         lambda b, f, pp, cc: (f, cc, 0, 0)),
-            pl.BlockSpec((nf_b, 3), lambda b, f, pp, cc: (f, 0)),
-        ]
-        args = [x_padded, w, b_arr]
-        if epi.residual:
-            in_specs.append(pl.BlockSpec((1, nf_b, p_b, q),
-                                         lambda b, f, pp, cc: (b, f, pp, 0)))
-            args.append(residual)
-        out = pl.pallas_call(
-            kern,
-            grid=(n, g_nf, g_p, g_c),
-            in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, nf_b, p_b_o, q_o),
-                                   lambda b, f, pp, cc: (b, f, pp, 0)),
-            out_shape=jax.ShapeDtypeStruct((n, nf_pad, p_o_pad, q_o),
-                                           out_dtype),
-            scratch_shapes=[pltpu.VMEM((nf_b, p_b, q), jnp.float32)],
-            interpret=interpret,
-        )(*args)
-    return out[:, :nf, :p_valid, :q_valid]
+                                 p_block=p_b, q=q, n_c=spec.cg_folds,
+                                 epi=epi)
+        scratch = pltpu.VMEM((nf_b, p_b, q), jnp.float32)
+    out = pl.pallas_call(
+        kern, grid=spec.grid, in_specs=in_specs,
+        out_specs=spec.output.block_spec(), out_shape=out_shape,
+        scratch_shapes=[scratch],
+        interpret=interpret,
+    )(*args)
+    return out[:, :nf, :spec.p_valid, :q_v]

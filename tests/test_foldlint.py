@@ -1,0 +1,348 @@
+"""foldlint catches seeded violations: every checker is handed a
+known-good plan / kernel spec / graph with exactly one invariant broken
+(frozen dataclasses mutated via ``object.__setattr__`` where construction
+itself would refuse), and must report the precise violation class.
+
+Covered classes: plan.group-straddle, plan.vmem-overflow, plan.mxu-align,
+plan.grid-coverage, plan.not-clamped, plan.depthwise-shape,
+plan.groups-mismatch, index.write-race, index.coverage, index.oob,
+index.dw-offset, index.group-offset, index.block-align, graph.dead-node,
+graph.epilogue-conflict, fusion.pool-after-residual,
+fusion.sole-consumer, fusion.conv-own-bias, audit.pallas-count,
+audit.unfused-op — plus the clean-path checks that the same verifiers
+pass the planner's own output and gate ``compile_network(verify=...)``.
+"""
+import dataclasses
+import types
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (audit_compiled, check_fusion, check_kernel_spec,
+                            check_plan, lint_graph)
+from repro.analysis.report import FoldLintError, Report
+from repro.core.epilogue import Epilogue
+from repro.core.graph import StreamGraph
+from repro.core.loopnest import ConvLoopNest
+from repro.core.mapping import ConvBlockPlan, plan_conv_blocks
+from repro.kernels.conv2d_ws import fold_kernel_spec
+
+
+def _smuggle(obj, **attrs):
+    """Mutate a frozen dataclass past its constructor's validation."""
+    for k, v in attrs.items():
+        object.__setattr__(obj, k, v)
+    return obj
+
+
+DENSE = ConvLoopNest(n=1, nf=64, c=32, r=3, s=3, x=16, y=16,
+                     stride=1, pad=1)
+GROUPED = ConvLoopNest(n=1, nf=32, c=32, r=3, s=3, x=16, y=16,
+                       stride=1, pad=1, groups=4)
+DW = ConvLoopNest(n=1, nf=32, c=32, r=3, s=3, x=16, y=16,
+                  stride=1, pad=1, groups=32)
+
+
+# --------------------------------------------------------------------------
+# plan verifier
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cv", [DENSE, GROUPED, DW])
+def test_planner_output_is_clean(cv):
+    rep = check_plan(cv, plan_conv_blocks(cv).clamped(cv.nf, cv.c, cv.p))
+    assert rep.errors == []
+
+
+def test_plan_group_straddle():
+    """c_block=6 does not divide C/G=8: a depth fold would mix channels
+    from two independent group reductions."""
+    plan = ConvBlockPlan(nf_block=8, c_block=6, p_block=16, grid=(4, 2, 1),
+                         vmem_bytes=0, groups=4)
+    rep = check_plan(GROUPED, plan)
+    assert rep.has("plan.group-straddle")
+    assert any("straddle" in f.message or "mix channels" in f.message
+               for f in rep.errors)
+
+
+def test_plan_vmem_overflow():
+    plan = plan_conv_blocks(DENSE).clamped(DENSE.nf, DENSE.c, DENSE.p)
+    rep = check_plan(DENSE, plan, vmem_limit=1024)
+    assert rep.has("plan.vmem-overflow")
+
+
+def test_plan_mxu_misalignment():
+    plan = ConvBlockPlan(nf_block=12, c_block=32, p_block=16,
+                         grid=(6, 1, 1), vmem_bytes=0)
+    rep = check_plan(DENSE, plan)
+    assert rep.has("plan.mxu-align")
+
+
+def test_plan_clamped_to_ragged_extent_is_aligned_enough():
+    """nf_block == N_F is the legal clamp of a ragged filter count, not an
+    alignment bug."""
+    ragged = ConvLoopNest(n=1, nf=10, c=8, r=3, s=3, x=8, y=8,
+                          stride=1, pad=1)
+    plan = plan_conv_blocks(ragged).clamped(10, 8, ragged.p)
+    assert plan.nf_block == 10
+    assert check_plan(ragged, plan).errors == []
+
+
+def test_plan_grid_coverage():
+    plan = ConvBlockPlan(nf_block=8, c_block=32, p_block=16,
+                         grid=(1, 1, 1), vmem_bytes=0)
+    rep = check_plan(DENSE, plan)
+    assert rep.has("plan.grid-coverage")
+    assert any("missed" in f.message for f in rep.errors)
+
+
+def test_plan_not_clamped():
+    plan = ConvBlockPlan(nf_block=128, c_block=32, p_block=16,
+                         grid=(1, 1, 1), vmem_bytes=0)
+    rep = check_plan(DENSE, plan)
+    assert rep.has("plan.not-clamped")
+
+
+def test_plan_depthwise_shape():
+    plan = ConvBlockPlan(nf_block=16, c_block=8, p_block=16,
+                         grid=(1, 4, 1), vmem_bytes=0, groups=32)
+    rep = check_plan(DW, plan)
+    assert rep.has("plan.depthwise-shape")
+
+
+def test_plan_groups_mismatch():
+    plan = plan_conv_blocks(DENSE)
+    rep = check_plan(GROUPED, plan)
+    assert rep.codes() == ["plan.groups-mismatch"]
+
+
+# --------------------------------------------------------------------------
+# index-map analyzer (seeded via frozen-spec mutation)
+# --------------------------------------------------------------------------
+
+def _ws_spec(**kw):
+    plan = ConvBlockPlan(nf_block=16, c_block=16, p_block=16,
+                         grid=(2, 1, 1), vmem_bytes=0)
+    return fold_kernel_spec((1, 16, 18, 18), (32, 16, 3, 3),
+                            plan=plan, **kw)
+
+
+def _replace_operand(spec, role, **attrs):
+    """Return ``spec`` with one operand's fields swapped out."""
+    if role == "out":
+        return dataclasses.replace(
+            spec, output=dataclasses.replace(spec.output, **attrs))
+    inputs = tuple(dataclasses.replace(op, **attrs) if op.role == role
+                   else op for op in spec.inputs)
+    return dataclasses.replace(spec, inputs=inputs)
+
+
+def test_kernel_spec_clean_across_dataflows():
+    for df in ("weight_stationary", "output_stationary"):
+        assert check_kernel_spec(_ws_spec(dataflow=df)).errors == []
+    dw = fold_kernel_spec((1, 32, 18, 18), (32, 1, 3, 3), groups=32,
+                          dataflow="depthwise")
+    assert check_kernel_spec(dw).errors == []
+
+
+def test_index_aliased_output_write_race_and_coverage():
+    """An output index map that ignores the filter fold makes both nf
+    folds write block (0,0,0,0): a race on a non-reduction axis, and a
+    missed tile."""
+    spec = _replace_operand(_ws_spec(), "out",
+                            index_map=lambda b, f, cc, pp: (b, 0, 0, 0))
+    rep = check_kernel_spec(spec)
+    assert rep.has("index.write-race")
+    assert rep.has("index.coverage")
+    assert any("nf" in f.message for f in rep.errors
+               if f.code == "index.write-race")
+
+
+def test_index_out_of_bounds_read():
+    spec = _replace_operand(_ws_spec(), "x",
+                            index_map=lambda b, f, cc, pp:
+                            (b, cc + 10, 0, 0))
+    rep = check_kernel_spec(spec)
+    assert rep.has("index.oob")
+
+
+def test_index_wrong_depthwise_offset():
+    plan = ConvBlockPlan(nf_block=8, c_block=8, p_block=16,
+                         grid=(1, 4, 1), vmem_bytes=0, groups=32)
+    spec = fold_kernel_spec((1, 32, 18, 18), (32, 1, 3, 3), groups=32,
+                            dataflow="depthwise", plan=plan)
+    assert check_kernel_spec(spec).errors == []
+    bad = _replace_operand(spec, "x",
+                           index_map=lambda b, cc, pp: (b, 0, 0, 0))
+    rep = check_kernel_spec(bad)
+    assert rep.has("index.dw-offset")
+
+
+def test_index_wrong_group_offset():
+    spec = fold_kernel_spec((1, 32, 18, 18), (32, 8, 3, 3), groups=4)
+    assert check_kernel_spec(spec).errors == []
+    bad = _replace_operand(spec, "x",
+                           index_map=lambda b, f, cc, pp: (b, 0, 0, 0))
+    rep = check_kernel_spec(bad)
+    assert rep.has("index.group-offset")
+    assert any("group" in f.message for f in rep.errors)
+
+
+def test_index_block_misalignment():
+    spec = _replace_operand(_ws_spec(), "x", block=(1, 5, 18, 18))
+    rep = check_kernel_spec(spec)
+    assert rep.has("index.block-align")
+
+
+# --------------------------------------------------------------------------
+# graph linter + fusion re-derivation
+# --------------------------------------------------------------------------
+
+def test_graph_dead_node_is_warned():
+    g = StreamGraph()
+    g.conv("c1", "x")
+    g.conv("c2", "x")                    # output; c1 is now unreachable
+    rep = lint_graph(g)
+    assert rep.errors == []
+    assert [f.code for f in rep.warnings] == ["graph.dead-node"]
+    assert rep.warnings[0].where == "c1"
+
+
+def test_graph_smuggled_epilogue_conflict():
+    g = StreamGraph()
+    g.conv("c1", "x")
+    _smuggle(g.node("c1"), epilogue=_smuggle(Epilogue(relu=True),
+                                             relu6=True))
+    rep = lint_graph(g)
+    assert rep.has("graph.epilogue-conflict")
+    assert any("exclusive activations" in f.message for f in rep.errors)
+
+
+def test_fusion_pool_after_residual():
+    orig = StreamGraph()
+    orig.conv("c1", "x")
+    orig.residual_add("r", "c1", "x")
+    orig.maxpool2("m", "r")
+    fused = StreamGraph()
+    fused.conv("c1", "x")
+    _smuggle(fused.node("c1"), residual="x",
+             epilogue=_smuggle(Epilogue(residual=True), pool="max2"))
+    rep = check_fusion(orig, fused)
+    assert rep.has("fusion.pool-after-residual")
+
+
+def test_fusion_sole_consumer():
+    orig = StreamGraph()
+    orig.conv("c1", "x")
+    orig.relu("rl", "c1")
+    orig.residual_add("r", "rl", "c1")   # c1 has two consumers
+    fused = StreamGraph()
+    fused.conv("c1", "x")
+    _smuggle(fused.node("c1"), epilogue=Epilogue(relu=True))
+    fused.residual_add("r", "c1", "c1")
+    rep = check_fusion(orig, fused)
+    assert rep.has("fusion.sole-consumer")
+
+
+def test_fusion_foreign_bias():
+    orig = StreamGraph()
+    orig.conv("c1", "x")
+    orig.bias("b", "c1", param="other_layer")
+    fused = StreamGraph()
+    fused.conv("c1", "x")
+    _smuggle(fused.node("c1"), epilogue=Epilogue(bias=True))
+    rep = check_fusion(orig, fused)
+    assert rep.has("fusion.conv-own-bias")
+    assert any("other_layer" in f.message for f in rep.errors)
+
+
+def test_fusion_legal_derivation_matches_fuse_graph():
+    """The independent re-derivation agrees with the real fusion pass on a
+    residual-block-shaped graph (no errors; at most style warnings)."""
+    from repro.core.graph import fuse_graph
+    g = StreamGraph()
+    g.conv("c1", "x")
+    g.bias(None, "c1")
+    g.relu("a1")
+    g.conv("c2", "a1")
+    g.bias(None, "c2")
+    g.residual_add("r", "c2.bias", "a1")
+    g.relu("a2", "r")
+    assert check_fusion(g, fuse_graph(g)).errors == []
+
+
+# --------------------------------------------------------------------------
+# jaxpr auditor
+# --------------------------------------------------------------------------
+
+def _fake_net(apply, layers=1, mode="pallas", fused=True):
+    return types.SimpleNamespace(
+        apply=apply, mode=mode, fused=fused,
+        layer_schedules=[(f"c{i}", None) for i in range(layers)])
+
+
+def test_audit_flags_missing_pallas_calls_and_leaked_epilogue():
+    net = _fake_net(lambda params, x: (x + 1.0) * 2.0)
+    audit = audit_compiled(net, {}, (1, 3, 8, 8))
+    assert not audit.ok
+    codes = set(audit.findings.codes())
+    assert codes == {"audit.pallas-count", "audit.unfused-op"}
+    assert audit.pallas_calls == 0 and audit.conv_layers == 1
+    assert audit.op4d("add") == 1 and audit.op4d("mul") == 1
+
+
+def test_audit_ignores_non_4d_math():
+    """Rank-1/2 tensor math (BN statistic folds, the fc head) is not an
+    epilogue leak; reference mode is never audited for pallas counts."""
+    net = _fake_net(lambda params, x: x @ x.T + 1.0, mode="reference")
+    audit = audit_compiled(net, {}, (8, 8))
+    assert audit.ok and audit.op4d("add") == 0
+
+
+# --------------------------------------------------------------------------
+# engine gate: compile_network(verify=...)
+# --------------------------------------------------------------------------
+
+def test_compile_network_verify_gates_smuggled_graph():
+    import numpy as np
+    from repro.core.engine import compile_network
+    g = StreamGraph()
+    g.conv("c1", "x", pad=1)
+    _smuggle(g.node("c1"), epilogue=_smuggle(Epilogue(relu=True),
+                                             relu6=True))
+    params = {"c1": {"w": jnp.asarray(
+        np.random.default_rng(0).normal(size=(8, 3, 3, 3)), jnp.float32),
+        "b": jnp.zeros((8,), jnp.float32)}}
+    with pytest.raises(FoldLintError) as ei:
+        compile_network(params, g, (1, 3, 8, 8), policy="pallas",
+                        jit=False, fuse_epilogues=False)
+    assert any(f.code == "graph.epilogue-conflict" for f in ei.value.findings)
+    # the flag gates it: verify=False compiles (relu then relu6 is a
+    # legal, if odd, flush order at kernel level)
+    net = compile_network(params, g, (1, 3, 8, 8), policy="pallas",
+                          jit=False, fuse_epilogues=False, verify=False)
+    assert len(net.layer_schedules) == 1
+
+
+# --------------------------------------------------------------------------
+# report plumbing + CLI
+# --------------------------------------------------------------------------
+
+def test_report_accumulates_and_serializes():
+    rep = Report()
+    assert rep.ok and len(rep) == 0
+    rep.add("plan.degenerate", "c1", "boom")
+    rep.add("plan.vmem-pressure", "c1", "tight", severity="warning")
+    assert not rep.ok and len(rep.errors) == 1 and len(rep.warnings) == 1
+    d = rep.as_dict()
+    assert [f["code"] for f in d["findings"]] \
+        == ["plan.degenerate", "plan.vmem-pressure"]
+    err = FoldLintError(rep.errors)
+    assert "plan.degenerate" in str(err) and err.findings == (rep.errors[0],)
+
+
+def test_foldlint_cli_clean_on_zoo_model(capsys):
+    from repro.analysis.foldlint import main
+    assert main(["--model", "vgg16"]) == 0
+    out = capsys.readouterr().out
+    assert "foldlint vgg16: ok" in out
+    assert "13 conv layers, 13 pallas calls" in out

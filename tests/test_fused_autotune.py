@@ -555,23 +555,24 @@ def test_load_tuning_skips_corrupt_entry_keeps_good_ones(tmp_path):
 def test_compiled_fused_network_single_pallas_call_per_conv():
     """The fused pallas net's jaxpr contains exactly 13 pallas_calls (one
     per conv layer) and no standalone max-pool or ReLU between them —
-    every epilogue flushes in-kernel."""
+    every epilogue flushes in-kernel.  Asserted through the structured
+    jaxpr auditor (``repro.analysis.audit_compiled``)."""
+    from repro.analysis import audit_compiled
     from repro.models import vgg
     params = vgg.init_params(jax.random.PRNGKey(0), width_mult=0.0625,
                              img=32, classes=10)
-    x = jnp.zeros((1, 3, 32, 32))
+    shape = (1, 3, 32, 32)
     net = vgg.compile_forward(params, img=32, batch=1, policy="pallas",
                               jit=False)
-    jaxpr = jax.make_jaxpr(net.apply)(params, x)
-    assert str(jaxpr).count("pallas_call") == 13
-    top = [e.primitive.name for e in jaxpr.eqns]
-    assert "reduce_max" not in top            # all 5 pools fused in-kernel
-    assert top.count("custom_jvp_call") == 2  # only the 2 fc-head relus
+    audit = audit_compiled(net, params, shape)
+    assert audit.ok, "\n".join(map(str, audit.findings))
+    assert audit.pallas_calls == 13
+    assert audit.top("reduce_max") == 0       # all 5 pools fused in-kernel
+    assert audit.top("custom_jvp_call") == 2  # only the 2 fc-head relus
     unfused = vgg.compile_forward(params, img=32, batch=1, policy="pallas",
                                   fuse_epilogues=False, jit=False)
-    jaxpr_un = jax.make_jaxpr(unfused.apply)(params, x)
-    assert str(jaxpr_un).count("pallas_call") == 13
-    top_un = [e.primitive.name for e in jaxpr_un.eqns]
-    assert top_un.count("reduce_max") == 5    # pools separate when unfused
-    assert top_un.count("custom_jvp_call") == 15   # 13 trunk + 2 head relus
-    assert len(jaxpr_un.eqns) > len(jaxpr.eqns)
+    audit_un = audit_compiled(unfused, params, shape)
+    assert audit_un.pallas_calls == 13
+    assert audit_un.top("reduce_max") == 5    # pools separate when unfused
+    assert audit_un.top("custom_jvp_call") == 15   # 13 trunk + 2 head relus
+    assert audit_un.n_eqns > audit.n_eqns

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import audit_compiled
 from repro.core.engine import (ScheduleCache, ScheduleKey,
                                tuning_candidates)
 from repro.core.loopnest import ConvLoopNest
@@ -143,38 +144,29 @@ def test_fused_network_single_pallas_call_per_conv(tiny_mnv2):
     params, _, _ = tiny_mnv2
     net = mobilenet.compile_forward(params, img=IMG, batch=1,
                                     policy="pallas", jit=False)
-    x0 = jnp.zeros((1, 3, IMG, IMG))
-    def eqns_4d(jaxpr, *prims):
-        """Top-level eqns of the given primitives touching a 4-D tensor
-        (rank-1 BN-vector folds and the 2-D head don't count).  jnp.clip
-        traces as a pjit eqn named 'clip'."""
-        out = []
-        for e in jaxpr.eqns:
-            name = e.primitive.name
-            if name == "pjit":
-                name = e.params.get("name", name)
-            if (name in prims and any(getattr(v.aval, "ndim", 0) == 4
-                                      for v in e.invars)):
-                out.append(e)
-        return out
-
-    jaxpr = jax.make_jaxpr(net.apply)(params, x0)
-    assert str(jaxpr).count("pallas_call") == mobilenet.n_convs() == 52
-    names = [e.primitive.name for e in jaxpr.eqns]
-    assert names.count("custom_jvp_call") == 0     # no standalone relu
-    assert names.count("reduce_max") == 0          # no standalone pool
+    shape = (1, 3, IMG, IMG)
+    # the structured auditor owns the 4-D filtering and pjit-name
+    # resolution these assertions used to hand-roll (rank-1 BN-vector
+    # folds and the 2-D head don't count; jnp.clip traces as a pjit eqn
+    # named 'clip')
+    audit = audit_compiled(net, params, shape)
+    assert audit.ok, "\n".join(map(str, audit.findings))
+    assert audit.pallas_calls == mobilenet.n_convs() == 52
+    assert audit.top("custom_jvp_call") == 0       # no standalone relu
+    assert audit.top("reduce_max") == 0            # no standalone pool
     # no standalone relu6 and no standalone residual add or BN affine:
     # nothing 4-D escapes the kernels
-    assert not eqns_4d(jaxpr, "clip", "max", "min", "add", "mul")
+    assert all(audit.op4d(p) == 0
+               for p in ("clip", "max", "min", "add", "mul"))
     unfused = mobilenet.compile_forward(params, img=IMG, batch=1,
                                         policy="pallas", jit=False,
                                         fuse_epilogues=False)
-    jaxpr_un = jax.make_jaxpr(unfused.apply)(params, x0)
-    assert str(jaxpr_un).count("pallas_call") == 52
+    audit_un = audit_compiled(unfused, params, shape)
+    assert audit_un.pallas_calls == 52
     # standalone relu6s: stem + head + 2 per block (1 for the t=1 block)
-    assert len(eqns_4d(jaxpr_un, "clip")) == 35
+    assert audit_un.op4d("clip") == 35
     # one BN shift add per conv + the residual skips
-    assert len(eqns_4d(jaxpr_un, "add")) == 52 + mobilenet.n_residual_adds()
+    assert audit_un.op4d("add") == 52 + mobilenet.n_residual_adds()
 
 
 def test_bn_folding_bitwise_invariance(tiny_mnv2):
@@ -397,3 +389,27 @@ def test_bench_gate_distills_and_compares(tmp_path):
     slow_srv["serving_by_model"]["vgg16"]["kips"] = 0.7
     fails = compare(extract(slow_srv), base, tol=0.2)
     assert [k for k, _, _ in fails] == ["throughput"]
+
+
+def test_bench_gate_validates_baseline_schema():
+    """A malformed baseline is refused up front with *every* defect
+    reported in one pass — not a KeyError on the first missing section."""
+    from benchmarks.check_bench import extract, validate_baseline
+    good = extract({"pallas_calls": 13,
+                    "latency": {"auto_per_img_s": 0.01}})
+    assert validate_baseline(good) == []
+    # several defects at once: all surface in a single validation run
+    bad = {"exact": {"vgg16.pallas_calls": 13.5,
+                     "vgg16.fold_reuse.hits": "five"},
+           "latency": {"serving.vgg16.p95_s": -0.1},
+           "extra_section": {}}
+    problems = validate_baseline(bad)
+    assert len(problems) == 5
+    text = "\n".join(problems)
+    assert "not an integral count" in text          # 13.5
+    assert "not a number" in text                   # "five"
+    assert "negative value" in text                 # -0.1
+    assert "missing section 'throughput'" in text
+    assert "unknown section 'extra_section'" in text
+    assert validate_baseline([1, 2]) \
+        == ["baseline must be a JSON object, got list"]

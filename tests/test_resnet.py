@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import audit_compiled
 from repro.core.engine import ScheduleCache
 from repro.models import resnet
 
@@ -82,27 +83,27 @@ def test_gradients_flow_through_fused_residual_vjp(tiny_resnet):
 def test_fused_network_single_pallas_call_per_conv(tiny_resnet):
     """The fused net's jaxpr has exactly n_convs()=20 pallas_calls and no
     standalone residual add, ReLU, or pool between them: each residual
-    block is its convs' fused kernels and nothing else."""
+    block is its convs' fused kernels and nothing else.  Asserted through
+    the structured jaxpr auditor (``repro.analysis.audit_compiled``)."""
     params, _, _ = tiny_resnet
     net = resnet.compile_forward(params, img=IMG, batch=1, policy="pallas",
                                  jit=False)
-    x0 = jnp.zeros((1, 3, IMG, IMG))
-    jaxpr = jax.make_jaxpr(net.apply)(params, x0)
-    assert str(jaxpr).count("pallas_call") == resnet.n_convs() == 20
-    top = [e.primitive.name for e in jaxpr.eqns]
-    assert top.count("custom_jvp_call") == 0     # no standalone relu
-    assert top.count("reduce_max") == 0          # no standalone pool
+    shape = (1, 3, IMG, IMG)
+    audit = audit_compiled(net, params, shape)
+    assert audit.ok, "\n".join(map(str, audit.findings))
+    assert audit.pallas_calls == resnet.n_convs() == 20
+    assert audit.top("custom_jvp_call") == 0     # no standalone relu
+    assert audit.top("reduce_max") == 0          # no standalone pool
     # only the fc head's bias add is a top-level add — the 8 residual
     # shortcut adds all flush inside their conv's pallas_call
-    assert top.count("add") == 1
+    assert audit.top("add") == 1
     unfused = resnet.compile_forward(params, img=IMG, batch=1,
                                      policy="pallas", jit=False,
                                      fuse_epilogues=False)
-    jaxpr_un = jax.make_jaxpr(unfused.apply)(params, x0)
-    top_un = [e.primitive.name for e in jaxpr_un.eqns]
-    assert str(jaxpr_un).count("pallas_call") == 20
-    assert top_un.count("add") == 1 + 20 + 8     # fc + biases + shortcuts
-    assert top_un.count("custom_jvp_call") == 17  # stem + 2 per block
+    audit_un = audit_compiled(unfused, params, shape)
+    assert audit_un.pallas_calls == 20
+    assert audit_un.top("add") == 1 + 20 + 8     # fc + biases + shortcuts
+    assert audit_un.top("custom_jvp_call") == 17  # stem + 2 per block
 
 
 # --------------------------------------------------------------------------
