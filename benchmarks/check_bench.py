@@ -19,6 +19,12 @@ Three metric classes, three disciplines:
   pass — the gate is one-sided.
 * **throughput** — serving KIPS per model: fail when measured drops more
   than the same tolerance below baseline.
+* **robustness** — the serving runtime's reliability counters: the
+  deadline hit rate per model gates as an absolute *floor* (got below
+  baseline fails — no tolerance band; a deadline-free CI smoke is
+  deterministically 1.0), and ``lost_requests`` gates in **exact** at 0
+  (the zero-loss invariant: every submitted request reaches a terminal
+  outcome).
 
 A fresh metric with no baseline entry fails the gate too (it means the
 baseline predates the metric — re-baseline deliberately, not silently).
@@ -53,7 +59,7 @@ def extract(bench: dict) -> dict:
     """Distill the gated metrics out of a full bench snapshot.  The
     baseline file stores exactly this distillation (stable under bench
     sections the gate doesn't police)."""
-    out = {"exact": {}, "latency": {}, "throughput": {}}
+    out = {"exact": {}, "latency": {}, "throughput": {}, "robustness": {}}
 
     def model_section(name: str, sec: dict) -> None:
         fr = sec.get("fold_reuse", {})
@@ -81,6 +87,13 @@ def extract(bench: dict) -> dict:
         p95 = sec.get("latency", {}).get("p95_s")
         if p95 is not None:
             out["latency"][f"serving.{m}.p95_s"] = float(p95)
+        rb = sec.get("robustness", {})
+        if "lost_requests" in rb:
+            out["exact"][f"serving.{m}.lost_requests"] = \
+                int(rb["lost_requests"])
+        if "deadline_hit_rate" in rb:
+            out["robustness"][f"serving.{m}.deadline_hit_rate"] = \
+                float(rb["deadline_hit_rate"])
     return out
 
 
@@ -93,7 +106,8 @@ def validate_baseline(baseline) -> list:
     if not isinstance(baseline, dict):
         return [f"baseline must be a JSON object, got "
                 f"{type(baseline).__name__}"]
-    known = {"exact": int, "latency": float, "throughput": float}
+    known = {"exact": int, "latency": float, "throughput": float,
+             "robustness": float}
     for section, want in known.items():
         sec = baseline.get(section)
         if sec is None:
@@ -122,7 +136,7 @@ def validate_baseline(baseline) -> list:
                                 f"{value!r}")
     for section in sorted(set(baseline) - set(known)):
         problems.append(f"unknown section {section!r} (want exact / "
-                        f"latency / throughput)")
+                        f"latency / throughput / robustness)")
     return problems
 
 
@@ -153,9 +167,21 @@ def compare(fresh: dict, baseline: dict, tol: float) -> list:
                           f"{got:.3f} vs baseline {base:.3f} "
                           f"({(1 - got / base) * 100:.1f}% drop > "
                           f"{tol * 100:.0f}% budget)"))
+    # robustness gates as an absolute floor: any drop below baseline
+    # fails (no tolerance band — a lost deadline is a lost deadline);
+    # improvements pass and can be adopted with --update
+    for metric, base in sorted(baseline["robustness"].items()):
+        got = fresh["robustness"].get(metric)
+        if got is None:
+            fails.append(("robustness", metric, "missing from fresh bench"))
+        elif got < base:
+            fails.append(("robustness", metric,
+                          f"{got:.4f} vs baseline floor {base:.4f} — "
+                          "the serving runtime is missing deadlines it "
+                          "used to hit"))
     # a metric the baseline has never seen means the baseline rotted —
     # every class, or a new model's metrics would be silently ungated
-    for kind in ("exact", "latency", "throughput"):
+    for kind in ("exact", "latency", "throughput", "robustness"):
         for metric in sorted(fresh[kind]):
             if metric not in baseline.get(kind, {}):
                 fails.append((kind, metric,
@@ -203,7 +229,7 @@ def main(argv=None) -> int:
 
     fails = compare(fresh, baseline, args.latency_tolerance)
     n_checked = sum(len(baseline[k]) for k in
-                    ("exact", "latency", "throughput"))
+                    ("exact", "latency", "throughput", "robustness"))
     if fails:
         print(f"PERF GATE: {len(fails)}/{n_checked} checks failed "
               f"(tolerance {args.latency_tolerance * 100:.0f}%):",

@@ -123,7 +123,13 @@ def solve_elastic_mesh(available_devices: int, model_parallel: int,
 
 
 class PreemptionGuard:
-    """SIGTERM/SIGINT -> request a checkpoint at the next step boundary."""
+    """SIGTERM/SIGINT -> request a clean stop at the next step boundary.
+
+    Training drains to a checkpoint; serving (``launch/serve.py --vision``)
+    stops admitting, flushes in-flight batches, and still emits metrics.
+    Usable as a context manager: ``with PreemptionGuard() as guard: ...``
+    installs on entry and always restores the original handlers on exit.
+    """
 
     def __init__(self):
         self.requested = False
@@ -140,3 +146,10 @@ class PreemptionGuard:
     def uninstall(self) -> None:
         for sig, h in self._orig.items():
             signal.signal(sig, h)
+        self._orig.clear()
+
+    def __enter__(self) -> "PreemptionGuard":
+        return self.install()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.uninstall()

@@ -10,10 +10,25 @@ vision engine (``serve/vision.py``).
 The vision path serves a deterministic mixed-size request stream through
 the bucketed ``CompiledNetwork`` forwards of any registered conv model
 (``models/zoo.py``, ``--model``) and merges its measured metrics (KIPS,
-latency percentiles, slot occupancy, fold-reuse rates) into
-``BENCH_vgg.json``: per-model under ``serving_by_model.<name>``, with the
-legacy flat ``serving`` section still tracking vgg16 (the original CI
-smoke contract) so older tooling keeps working.
+latency percentiles, slot occupancy, fold-reuse rates, robustness
+counters) into ``BENCH_vgg.json``: per-model under
+``serving_by_model.<name>``, with the legacy flat ``serving`` section
+still tracking vgg16 (the original CI smoke contract) so older tooling
+keeps working.
+
+The vision path runs under a ``PreemptionGuard``: on SIGTERM/SIGINT the
+engine stops admitting new requests, drains everything in flight, and
+still emits its metrics — a clean preemption drain instead of a dropped
+queue.
+
+``--chaos SEED`` switches to the deterministic fault-injection smoke
+(``serve/chaos.py``): the same stream is served under an injected fault
+schedule (``--chaos-profile`` kernel-fault | nan | slow-batch | mixed)
+and every recovery invariant is verified — zero lost requests, bitwise
+surviving responses, the profile's expected degraded/shed counters
+nonzero.  A violated invariant exits nonzero (the CI chaos job's
+contract); metrics land under ``chaos_by_model.<name>``, never touching
+the serving sections.
 """
 from __future__ import annotations
 
@@ -36,15 +51,19 @@ VISION_POLICIES = {"auto": "auto", "interpret": "pallas",
 
 
 def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json",
-                     model: Optional[str] = None) -> None:
+                     model: Optional[str] = None,
+                     section: str = "serving") -> None:
     """Merge the serving section into the perf snapshot, preserving the
     micro-bench sections ``benchmarks/run.py`` wrote (and tolerating a
     missing or corrupt file — same discipline as the tuning cache).
 
-    With ``model`` the metrics land under ``serving_by_model.<model>`` so
-    each model's snapshot survives the others' runs; the legacy flat
+    With ``model`` the metrics land under ``<section>_by_model.<model>``
+    so each model's snapshot survives the others' runs; the legacy flat
     ``serving`` section is only (re)written for vgg16 — or when no model
-    is named — never clobbered by another model's serve."""
+    is named — never clobbered by another model's serve.  Chaos runs pass
+    ``section="chaos"`` and land under ``chaos_by_model`` only, so a
+    fault-injected run can never overwrite the healthy serving numbers
+    the perf gate compares."""
     data = {}
     if os.path.exists(path):
         try:
@@ -55,32 +74,59 @@ def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json",
     if not isinstance(data, dict):
         data = {}
     if model is not None:
-        by_model = data.get("serving_by_model")
+        by_key = f"{section}_by_model"
+        by_model = data.get(by_key)
         if not isinstance(by_model, dict):
             by_model = {}
         by_model[model] = summary
-        data["serving_by_model"] = by_model
-    if model is None or model == "vgg16":
+        data[by_key] = by_model
+    if section == "serving" and (model is None or model == "vgg16"):
         data["serving"] = summary
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
-    key = f"serving_by_model.{model}" if model is not None else "serving"
-    print(f"# wrote serving metrics into {path} under {key!r}")
+    key = (f"{section}_by_model.{model}" if model is not None
+           else section)
+    print(f"# wrote {section} metrics into {path} under {key!r}")
+
+
+def chaos_main(args) -> dict:
+    """The deterministic fault-injection smoke: serve under an injected
+    fault schedule, verify every recovery invariant, exit nonzero on any
+    violation (``ChaosVerificationError`` propagates to the caller)."""
+    from repro.serve.chaos import chaos_summary
+    summary = chaos_summary(
+        args.model, profile=args.chaos_profile, seed=args.chaos,
+        requests=args.requests, img=args.img, width_mult=args.width,
+        policy=VISION_POLICIES[args.backend],
+        buckets=tuple(int(b) for b in args.buckets.split(",")),
+        deadline_s=args.deadline_s if args.deadline_s > 0 else 0.001,
+        deadline_every=args.deadline_every,
+        hang_timeout_s=args.hang_timeout_s, verbose=True)
+    merge_bench_json(summary, args.bench_json, model=args.model,
+                     section="chaos")
+    return summary
 
 
 def vision_main(args) -> dict:
+    from repro.ft.fault_tolerance import PreemptionGuard
     from repro.launch.mesh import make_local_mesh
     from repro.serve.vision import serving_summary
+    if args.chaos is not None:
+        return chaos_main(args)
     mesh = None
     if args.mesh:
         data, model_par = (int(t) for t in args.mesh.lower().split("x"))
         mesh = make_local_mesh(data, model_par)
     buckets = tuple(int(b) for b in args.buckets.split(","))
-    summary = serving_summary(
-        args.model, requests=args.requests, img=args.img,
-        width_mult=args.width, policy=VISION_POLICIES[args.backend],
-        buckets=buckets, mesh=mesh, seed=args.seed, autotune=args.autotune,
-        tuning_path=args.tuning_path or None, verbose=True)
+    with PreemptionGuard() as guard:    # SIGTERM -> stop admitting, drain
+        summary = serving_summary(
+            args.model, requests=args.requests, img=args.img,
+            width_mult=args.width, policy=VISION_POLICIES[args.backend],
+            buckets=buckets, mesh=mesh, seed=args.seed,
+            autotune=args.autotune, tuning_path=args.tuning_path or None,
+            deadline_s=args.deadline_s or None,
+            deadline_every=args.deadline_every,
+            guard=guard, verbose=True)
     merge_bench_json(summary, args.bench_json, model=args.model)
     return summary
 
@@ -144,6 +190,23 @@ def main():
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--tuning-path", default="")
     ap.add_argument("--bench-json", default="BENCH_vgg.json")
+    # robustness / fault injection
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request SLO in seconds (0 = no deadlines); "
+                         "requests past it are shed or expired")
+    ap.add_argument("--deadline-every", type=int, default=1,
+                    help="attach the deadline to every Nth request "
+                         "(1 = all)")
+    ap.add_argument("--hang-timeout-s", type=float, default=30.0,
+                    help="watchdog hang threshold for a single dispatch")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run the deterministic fault-injection smoke "
+                         "with this seed instead of the plain serve "
+                         "(vision only; exits nonzero on any recovery-"
+                         "invariant violation)")
+    ap.add_argument("--chaos-profile", default="mixed",
+                    choices=["kernel-fault", "nan", "slow-batch", "mixed"],
+                    help="which fault schedule --chaos injects")
     args = ap.parse_args()
     if args.vision:
         vision_main(args)

@@ -1,5 +1,6 @@
 """Continuous-batching image-inference engine over the compiled
-fold-schedule engine (DESIGN.md §6).
+fold-schedule engine (DESIGN.md §6), hardened into a fault-tolerant
+serving runtime (DESIGN.md §10).
 
 Mirrors the slot/queue design of ``serve/engine.py`` (the token engine)
 but drives ``core/engine.py:CompiledNetwork`` forwards instead of decode
@@ -18,9 +19,20 @@ steps:
   feeder: while the device runs batch k, batch k+1 is formed and
   ``device_put`` (the ``data/pipeline.py`` idiom of keeping the host one
   step ahead of the device);
+* the **fault-tolerant runtime** wraps the dispatch path: per-request
+  deadlines with measured-EWMA admission control and form-time expiry
+  (``serve/admission.py``), a degradation ladder that retries a failed
+  or non-finite primary batch on the reference forward and bisects a
+  still-failing batch to quarantine exactly the poisoned request, a
+  watchdog (built on ``ft/fault_tolerance.py``) flagging hung and
+  straggling dispatches, and an optional deterministic fault injector
+  (``serve/chaos.py``).  The static fold schedules are never touched —
+  all dynamism lives in this host runtime;
 * serving metrics — measured KIPS, p50/p95/p99 request latency, slot
-  occupancy, schedule-cache / fold-reuse hit rates — snapshot into the
-  bench JSON via ``benchmarks/run.py`` and ``launch/serve.py --vision``.
+  occupancy, schedule-cache / fold-reuse hit rates, plus the robustness
+  counters (shed / expired / failed / degraded / hung / deadline hit
+  rate) — snapshot into the bench JSON via ``benchmarks/run.py`` and
+  ``launch/serve.py --vision``.
 
 The engine is model-agnostic: it serves any ``StreamGraph`` registered in
 ``models/zoo.py`` (``serving_summary`` looks models up by name), and the
@@ -38,6 +50,8 @@ import numpy as np
 
 from repro.core.engine import BucketCompiler, ScheduleCache
 from repro.core.mapping import serving_conv_plan
+from repro.serve.admission import (AdmissionController, DispatchWatchdog,
+                                   RequestOutcome)
 from repro.serve.batcher import (BucketPolicy, FormedBatch, ImageBatcher,
                                  ImageRequest)
 
@@ -46,7 +60,13 @@ __all__ = ["ServingMetrics", "VisionEngine", "serving_summary"]
 
 @dataclasses.dataclass
 class ServingMetrics:
-    """Accumulated over ``VisionEngine.run`` calls (warmup excluded)."""
+    """Accumulated over ``VisionEngine.run`` calls (warmup excluded).
+
+    The original throughput/latency fields count *served* work; the
+    robustness counters below track the request lifecycle — every
+    submitted request ends in exactly one of the ``outcomes`` buckets, so
+    ``submitted == sum(outcomes) + still-queued`` is the zero-loss
+    invariant the chaos smoke asserts."""
     images: int = 0
     requests: int = 0
     batches: int = 0
@@ -54,6 +74,18 @@ class ServingMetrics:
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     occupancies: List[float] = dataclasses.field(default_factory=list)
     per_bucket: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # -- robustness (DESIGN.md §10) ---------------------------------------
+    submitted: int = 0            # requests entering the engine (any fate)
+    shed: int = 0                 # admission-rejected at submit
+    expired: int = 0              # deadline passed before batch formation
+    failed: int = 0               # quarantined by the degradation ladder
+    degraded_batches: int = 0     # primary batch fell back to reference
+    nonfinite_batches: int = 0    # primary output failed the finite check
+    hung_batches: int = 0         # dispatch outlived the hang timeout
+    straggler_events: int = 0     # bucket lane flagged by the detector
+    deadline_total: int = 0       # terminal requests that carried an SLO
+    deadline_hits: int = 0        # ... that completed OK in time
+    outcomes: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def kips(self) -> float:
@@ -65,6 +97,13 @@ class ServingMetrics:
     def slot_occupancy(self) -> float:
         return (sum(self.occupancies) / len(self.occupancies)
                 if self.occupancies else 0.0)
+
+    @property
+    def deadline_hit_rate(self) -> float:
+        """Fraction of SLO-carrying requests that completed in time (1.0
+        when nothing carried a deadline — an SLO-free run misses none)."""
+        return (self.deadline_hits / self.deadline_total
+                if self.deadline_total else 1.0)
 
     def latency_percentiles(self) -> Dict[str, float]:
         if not self.latencies_s:
@@ -88,7 +127,26 @@ class ServingMetrics:
             "slot_occupancy": round(self.slot_occupancy, 4),
             "per_bucket_batches": {str(k): v for k, v
                                    in sorted(self.per_bucket.items())},
+            "robustness": {
+                "submitted": self.submitted,
+                "shed": self.shed,
+                "expired": self.expired,
+                "failed": self.failed,
+                "degraded_batches": self.degraded_batches,
+                "nonfinite_batches": self.nonfinite_batches,
+                "hung_batches": self.hung_batches,
+                "straggler_events": self.straggler_events,
+                "deadline_total": self.deadline_total,
+                "deadline_hits": self.deadline_hits,
+                "deadline_hit_rate": round(self.deadline_hit_rate, 4),
+                "outcomes": {k: self.outcomes[k]
+                             for k in sorted(self.outcomes)},
+            },
         }
+
+
+class _NonFiniteOutput(RuntimeError):
+    """A primary forward completed but produced NaN/Inf in active rows."""
 
 
 class VisionEngine:
@@ -104,6 +162,16 @@ class VisionEngine:
     N_F filter-fold axis, everything else replicated) and every staged
     batch carries the ``serving_conv_plan`` batch sharding — GSPMD then
     runs the same jitted forwards data+model parallel.
+
+    **Degradation ladder** (DESIGN.md §10): a primary dispatch that
+    raises, or whose active rows come back non-finite, is retried on the
+    bucket's *reference* compiled forward (counted ``degraded_batches``;
+    the fold schedules stay untouched — only the executing kernel set
+    changes).  If the reference batch also fails, it is bisected —
+    halves retried recursively — until the poisoned request fails alone
+    (``failed``, quarantined) and every batchmate is served.  Requests
+    carry ``served_by`` (primary/reference) so callers can audit which
+    rung produced each response.
     """
 
     def __init__(self, params: Dict[str, Any], graph, *,
@@ -115,7 +183,9 @@ class VisionEngine:
                  head: Optional[Callable] = None,
                  fuse_epilogues: bool = True, autotune: bool = False,
                  tuning_path: Optional[str] = None,
-                 autotune_timer: Optional[Callable] = None):
+                 autotune_timer: Optional[Callable] = None,
+                 chaos=None, hang_timeout_s: float = 30.0,
+                 admission: Optional[AdmissionController] = None):
         bucket_policy = BucketPolicy(buckets)
         self.mesh = mesh
         self._x_sharding = None
@@ -143,20 +213,66 @@ class VisionEngine:
             head=head, fuse_epilogues=fuse_epilogues, autotune=autotune,
             tuning_path=tuning_path, autotune_timer=autotune_timer)
         self.metrics = ServingMetrics()
+        self.chaos = chaos
+        self.admission = admission if admission is not None else \
+            AdmissionController(bucket_policy.widths)
+        self.watchdog = DispatchWatchdog(bucket_policy.widths,
+                                         hang_timeout_s=hang_timeout_s)
+        self._ref_compiler: Optional[BucketCompiler] = None
 
     # -- request side ------------------------------------------------------
-    def submit(self, images: np.ndarray) -> ImageRequest:
-        return self.batcher.submit(images)
+    def submit(self, images: np.ndarray,
+               deadline_s: Optional[float] = None) -> ImageRequest:
+        """Validate, admission-check, and enqueue one request.
+
+        Malformed payloads raise ``BadRequestError`` (they never get a
+        request object).  A well-formed request whose ``deadline_s`` the
+        measured queue already blows is *returned un-queued* with
+        ``outcome == REJECTED`` (counted ``shed``) — load shedding is a
+        terminal outcome the caller observes, not an exception."""
+        req = self.batcher.make_request(images, deadline_s)
+        self.metrics.submitted += 1
+        ok, predicted = self.admission.admit(
+            req.n, self.batcher.pending_images, deadline_s)
+        if not ok:
+            req.finish(RequestOutcome.REJECTED,
+                       error=f"admission: predicted wait {predicted:.4f}s "
+                             f"exceeds deadline {deadline_s:.4f}s")
+            self.metrics.shed += 1
+            self._account(req)
+            return req
+        self.batcher.queue.append(req)
+        return req
 
     @property
     def pending(self) -> int:
         return len(self.batcher)
 
+    # -- lifecycle accounting ---------------------------------------------
+    def _account(self, req: ImageRequest) -> None:
+        """Fold one terminal request into the outcome/deadline counters —
+        called exactly once per request, at its terminal transition."""
+        m = self.metrics
+        key = req.outcome.value
+        m.outcomes[key] = m.outcomes.get(key, 0) + 1
+        if req.t_deadline is not None:
+            m.deadline_total += 1
+            if req.deadline_met:
+                m.deadline_hits += 1
+
+    def _drain_expired(self) -> None:
+        for req in self.batcher.expired:
+            self.metrics.expired += 1
+            self._account(req)
+        self.batcher.expired.clear()
+
     # -- device side -------------------------------------------------------
     def _stage(self) -> Optional[Tuple[FormedBatch, jnp.ndarray]]:
         """Form the next batch and start its host→device transfer (an
-        async ``device_put`` — the front half of the double buffer)."""
+        async ``device_put`` — the front half of the double buffer).
+        Form-time deadline expiries are accounted here."""
         fb = self.batcher.form()
+        self._drain_expired()
         if fb is None:
             return None
         # one transfer, straight to the (possibly sharded) device layout —
@@ -170,30 +286,147 @@ class VisionEngine:
     def _dispatch(self, staged: Tuple[FormedBatch, jnp.ndarray]):
         """Launch the bucket's compiled forward; returns without waiting
         (jit dispatch is async — the device computes while the host forms
-        and stages the next batch)."""
+        and stages the next batch).  A dispatch-time fault is carried in
+        the inflight tuple instead of raised, so the feeder keeps
+        feeding and recovery happens at completion time."""
         fb, x = staged
         net = self.compiler.network_for(fb.bucket)
-        return fb, net(self.params, x)
+        t0 = time.monotonic()
+        try:
+            if self.chaos is not None:
+                out = self.chaos.call(lambda a: net(self.params, a), x)
+            else:
+                out = net(self.params, x)
+            return fb, out, t0, None
+        except Exception as e:
+            return fb, None, t0, e
 
     def _complete(self, inflight, record: bool = True) -> None:
-        fb, out = inflight
-        logits = np.asarray(out)            # blocks until the device is done
+        fb, out, t0, exc = inflight
+        logits = None
+        if exc is None:
+            try:
+                logits = np.asarray(out)  # blocks until the device is done
+            except Exception as e:        # a device fault surfaces here
+                exc = e
         t_done = time.monotonic()
-        ImageBatcher.scatter(fb, logits, t_done)
-        if not record:
-            return
+        duration = t_done - t0
+        verdict = self.watchdog.observe(fb.bucket, duration)
+        self.admission.observe(fb.bucket, duration)
         m = self.metrics
-        m.images += fb.n_images
-        m.requests += len(fb.requests)
-        m.batches += 1
-        m.occupancies.append(fb.occupancy)
-        m.per_bucket[fb.bucket] = m.per_bucket.get(fb.bucket, 0) + 1
-        m.latencies_s.extend(r.latency_s for r in fb.requests)
+        if record:
+            m.hung_batches += verdict.hung
+            m.straggler_events += verdict.straggler
+            m.batches += 1
+            m.occupancies.append(fb.occupancy)
+            m.per_bucket[fb.bucket] = m.per_bucket.get(fb.bucket, 0) + 1
+        if exc is None and not np.isfinite(logits[:fb.n_images]).all():
+            if record:
+                m.nonfinite_batches += 1
+            exc = _NonFiniteOutput(
+                f"primary batch (bucket {fb.bucket}) produced non-finite "
+                "logits")
+        if exc is not None:
+            if record:
+                m.degraded_batches += 1
+            self._serve_degraded(list(fb.requests), record=record)
+            return
+        ImageBatcher.scatter(fb, logits, t_done)
+        if record:
+            m.images += fb.n_images
+            m.requests += len(fb.requests)
+            m.latencies_s.extend(r.latency_s for r in fb.requests)
+        for req in fb.requests:
+            self._account(req)
+
+    # -- degradation ladder ------------------------------------------------
+    @property
+    def reference_compiler(self) -> BucketCompiler:
+        """The fallback rung: reference-mode compiled forwards per bucket,
+        built lazily on first degradation, sharing the primary compiler's
+        ``ScheduleCache`` (planning stays pay-once; only the executing
+        kernels differ).  When the primary policy already *is* reference,
+        the primary compiler is reused outright."""
+        if self.compiler.policy == "reference":
+            return self.compiler
+        if self._ref_compiler is None:
+            self._ref_compiler = BucketCompiler(
+                self.params, self.compiler.graph, self.batcher.img,
+                chan=self.batcher.chan, policy="reference",
+                cache=self.compiler.cache, head=self.compiler.head)
+        return self._ref_compiler
+
+    def _reference_forward(self, reqs: List[ImageRequest]) -> np.ndarray:
+        """One reference-mode batch over ``reqs`` (re-packed and re-padded
+        to a bucket width).  Chaos wraps this too, on the ``recovery``
+        stream — scheduled faults never fire here, but a poisoned input
+        still does (see ``serve/chaos.py``)."""
+        total = sum(r.n for r in reqs)
+        bucket = self.batcher.policy.bucket_for(total)
+        x = np.zeros((bucket, self.batcher.chan, self.batcher.img,
+                      self.batcher.img), np.float32)
+        off = 0
+        for r in reqs:
+            x[off:off + r.n] = r.images
+            off += r.n
+        if self._x_sharding is not None:
+            xd = jax.device_put(x, self._x_sharding)
+        else:
+            xd = jnp.asarray(x)
+        net = self.reference_compiler.network_for(bucket)
+        if self.chaos is not None:
+            out = self.chaos.call(lambda a: net(self.params, a), xd,
+                                  stream="recovery")
+        else:
+            out = net(self.params, xd)
+        return np.asarray(out)
+
+    def _serve_degraded(self, reqs: List[ImageRequest],
+                        record: bool = True) -> None:
+        """The ladder below a failed primary batch: reference retry, then
+        recursive bisection, then single-request quarantine.  Every
+        request in ``reqs`` is terminal when this returns."""
+        try:
+            logits = self._reference_forward(reqs)
+        except Exception as e:
+            if len(reqs) == 1:
+                req = reqs[0]
+                req.finish(RequestOutcome.FAILED,
+                           error=f"quarantined: {type(e).__name__}: {e}")
+                if record:
+                    self.metrics.failed += 1
+                self._account(req)
+                return
+            mid = (len(reqs) + 1) // 2     # bisect: isolate the poison
+            self._serve_degraded(reqs[:mid], record=record)
+            self._serve_degraded(reqs[mid:], record=record)
+            return
+        t_done = time.monotonic()
+        m = self.metrics
+        off = 0
+        for req in reqs:
+            rows = logits[off:off + req.n]
+            off += req.n
+            if np.isfinite(rows).all():
+                req.logits = rows
+                req.served_by = "reference"
+                req.finish(RequestOutcome.OK, t=t_done)
+                if record:
+                    m.images += req.n
+                    m.requests += 1
+                    m.latencies_s.append(req.latency_s)
+            else:
+                req.finish(RequestOutcome.FAILED, t=t_done,
+                           error="quarantined: non-finite reference output")
+                if record:
+                    m.failed += 1
+            self._account(req)
 
     def warmup(self) -> List[int]:
         """Compile and run every bucket width once on zeros, so serving
         latencies measure steady-state forwards, not XLA traces.  Returns
-        the widths warmed."""
+        the widths warmed.  Chaos never wraps warmup — the injector's
+        dispatch indices count served batches only."""
         widths = list(self.batcher.policy.widths)
         for w in widths:
             net = self.compiler.network_for(w)
@@ -221,7 +454,8 @@ class VisionEngine:
         """Drain the queue with the double-buffered feeder: batch k+1 is
         formed and staged host→device while the device computes batch k,
         and completion (the blocking readback) happens only after k+1 has
-        been dispatched."""
+        been dispatched.  Recovery (the degradation ladder) runs inside
+        completion — the feeder never stalls on a fault."""
         t0 = time.monotonic()
         inflight = None
         batches = 0
@@ -247,6 +481,12 @@ class VisionEngine:
         d["compile"] = self.compiler.stats()    # buckets + fold-reuse rates
         d["buckets"] = list(self.batcher.policy.widths)
         d["mesh"] = (dict(self.mesh.shape) if self.mesh is not None else None)
+        # zero-loss invariant: submitted == terminal + still-queued
+        terminal = sum(self.metrics.outcomes.values())
+        d["robustness"]["lost_requests"] = (
+            self.metrics.submitted - terminal - self.pending)
+        if self.chaos is not None:
+            d["robustness"]["chaos_injected"] = dict(self.chaos.injected)
         return d
 
 
@@ -255,11 +495,21 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
                     policy: str = "auto", buckets: Sequence[int] = (1, 2, 4, 8),
                     mesh=None, seed: int = 0, autotune: bool = False,
                     tuning_path: Optional[str] = None,
+                    deadline_s: Optional[float] = None,
+                    deadline_every: int = 1,
+                    guard=None,
                     verbose: bool = False) -> dict:
     """Serve a deterministic mixed-size random request stream through a
     reduced-width registered model (``models/zoo.py``) and return the
     metrics dict (the per-model serving section of the bench JSON).
-    Shared by ``launch/serve.py --vision`` and ``benchmarks/run.py``."""
+    Shared by ``launch/serve.py --vision`` and ``benchmarks/run.py``.
+
+    ``deadline_s`` attaches an SLO to every ``deadline_every``-th request.
+    ``guard`` is a ``ft/fault_tolerance.py:PreemptionGuard`` (or anything
+    with a ``requested`` attribute): once it trips, admission stops —
+    remaining requests are never submitted — while everything already
+    queued is flushed and the metrics still emit (the clean SIGTERM
+    drain)."""
     from repro.models.zoo import get_conv_model
     spec = get_conv_model(model)
     params = spec.init_params(jax.random.PRNGKey(0), width_mult=width_mult,
@@ -271,14 +521,21 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
     rng = np.random.default_rng(seed)
     max_n = engine.batcher.policy.max_width
     sizes = rng.integers(1, max_n + 1, requests)
-    for n in sizes:
+    preempted = 0
+    for i, n in enumerate(sizes):
+        if guard is not None and getattr(guard, "requested", False):
+            preempted = len(sizes) - i      # stop admitting, keep draining
+            break
+        dl = (deadline_s if deadline_s is not None
+              and (deadline_every <= 1 or i % deadline_every == 0) else None)
         engine.submit(rng.standard_normal((int(n), 3, img, img))
-                      .astype(np.float32))
-    engine.run()
+                      .astype(np.float32), deadline_s=dl)
+    engine.run()                            # flush everything in flight
     d = engine.metrics_dict()
     d["workload"] = {"model": model, "width_mult": width_mult, "img": img,
                      "requests": int(requests), "policy": policy,
-                     "seed": seed, "backend": jax.default_backend()}
+                     "seed": seed, "backend": jax.default_backend(),
+                     "deadline_s": deadline_s, "preempted": preempted}
     if verbose:
         lat = d["latency"]
         print(f"served {d['requests']} requests / {d['images']} images in "
@@ -288,6 +545,15 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
               f"p99={lat['p99_s']}s; slot occupancy "
               f"{d['slot_occupancy']}; batches/bucket "
               f"{d['per_bucket_batches']}")
+        rb = d["robustness"]
+        print(f"robustness: outcomes {rb['outcomes']}, "
+              f"shed={rb['shed']} expired={rb['expired']} "
+              f"failed={rb['failed']} degraded={rb['degraded_batches']} "
+              f"deadline_hit_rate={rb['deadline_hit_rate']} "
+              f"lost={rb['lost_requests']}")
+        if preempted:
+            print(f"preemption drain: {preempted} request(s) never "
+                  "admitted; queue flushed cleanly")
         c = d["compile"]
         print(f"buckets compiled {c['buckets']}, "
               f"{c['distinct_schedules']} distinct schedules, "

@@ -1,0 +1,144 @@
+"""Seed fault-tolerance control plane (``ft/fault_tolerance.py``):
+heartbeat dead-rank detection with a fake clock, straggler windowing,
+elastic re-meshing invariants, and the preemption guard's signal
+handling.  All decision logic, no transport, no devices."""
+import os
+import signal
+
+import pytest
+
+from repro.ft.fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                                      PreemptionGuard, StragglerDetector,
+                                      solve_elastic_mesh)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# --------------------------------------------------------------------------
+# HeartbeatMonitor
+# --------------------------------------------------------------------------
+
+def test_heartbeat_declares_silent_ranks_dead():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(3, timeout_s=10.0, clock=clk)
+    assert mon.healthy() and mon.dead_ranks() == []
+    clk.advance(9.0)
+    for r in (0, 2):                      # rank 1 goes silent
+        mon.beat(r, step=1)
+    clk.advance(9.0)                      # rank 1 last seen 18s ago
+    assert mon.dead_ranks() == [1]
+    assert not mon.healthy()
+    mon.beat(1, step=1)                   # it comes back
+    assert mon.healthy()
+
+
+def test_heartbeat_timeout_is_strict_and_per_rank():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(2, timeout_s=5.0, clock=clk)
+    clk.advance(5.0)                      # exactly at the timeout: alive
+    assert mon.dead_ranks() == []
+    clk.advance(0.001)                    # past it: both silent since t=0
+    assert mon.dead_ranks() == [0, 1]
+    mon.beat(0, step=3)
+    assert mon.dead_ranks() == [1]        # only the still-silent rank
+
+
+# --------------------------------------------------------------------------
+# StragglerDetector
+# --------------------------------------------------------------------------
+
+def test_straggler_flags_slow_rank_over_median():
+    det = StragglerDetector(3, window=10, threshold=1.5)
+    for _ in range(10):
+        det.record(0, 1.0)
+        det.record(1, 1.0)
+        det.record(2, 2.0)                # 2x the median: flagged
+    assert det.stragglers() == [2]
+
+
+def test_straggler_needs_two_ranks_and_respects_window():
+    det = StragglerDetector(2, window=4, threshold=1.5)
+    det.record(0, 10.0)
+    assert det.stragglers() == []         # one rank reporting: no verdict
+    # rank 0 was slow historically but the window slides past it
+    for _ in range(4):
+        det.record(0, 1.0)
+        det.record(1, 1.0)
+    assert det.stragglers() == []         # old 10.0 aged out of the window
+    det2 = StragglerDetector(3, window=2, threshold=1.5)
+    det2.record(0, 1.0)
+    det2.record(1, 1.0)
+    det2.record(2, 1.0)
+    det2.record(2, 100.0)                 # recent slowness dominates
+    assert det2.stragglers() == [2]
+
+
+# --------------------------------------------------------------------------
+# solve_elastic_mesh
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("devices,tp,global_batch", [
+    (8, 2, 64), (7, 2, 64), (6, 2, 48), (16, 4, 256), (3, 1, 30),
+])
+def test_elastic_mesh_preserves_global_batch(devices, tp, global_batch):
+    plan = solve_elastic_mesh(devices, tp, global_batch)
+    dp, model = plan.mesh_shape
+    assert model == tp                    # TP degree never changes
+    assert dp * plan.per_device_batch * plan.grad_accum == global_batch
+    assert plan.per_device_batch <= 64
+    assert plan.devices_used == dp * tp
+    assert plan.dropped_devices == devices - plan.devices_used
+    assert plan.axis_names == ("data", "model")
+
+
+def test_elastic_mesh_folds_excess_batch_into_accum():
+    plan = solve_elastic_mesh(2, 2, global_batch=512,
+                              max_per_device_batch=64)
+    assert plan.mesh_shape == (1, 2)
+    assert plan.per_device_batch <= 64
+    assert plan.per_device_batch * plan.grad_accum == 512
+
+
+def test_elastic_mesh_refuses_to_shrink_tp():
+    with pytest.raises(ValueError, match="model_parallel"):
+        solve_elastic_mesh(3, 4, global_batch=64)
+
+
+def test_elastic_plan_is_frozen():
+    plan = ElasticPlan((2, 2), ("data", "model"), 8, 1, 0)
+    with pytest.raises(Exception):
+        plan.per_device_batch = 16
+
+
+# --------------------------------------------------------------------------
+# PreemptionGuard
+# --------------------------------------------------------------------------
+
+def test_preemption_guard_catches_sigterm_and_restores_handlers():
+    before = signal.getsignal(signal.SIGTERM)
+    guard = PreemptionGuard().install()
+    try:
+        assert not guard.requested
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert guard.requested            # caught, not killed
+    finally:
+        guard.uninstall()
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+def test_preemption_guard_context_manager():
+    before = signal.getsignal(signal.SIGINT)
+    with PreemptionGuard() as guard:
+        assert signal.getsignal(signal.SIGINT) == guard._handler
+        os.kill(os.getpid(), signal.SIGINT)
+        assert guard.requested
+    assert signal.getsignal(signal.SIGINT) is before

@@ -117,6 +117,29 @@ def test_engine_outputs_bitwise_equal_direct_forward(vgg_params, policy):
         np.testing.assert_array_equal(req.logits, want)
 
 
+def test_deadlined_requests_keep_bitwise_equivalence(vgg_params):
+    """Attaching a (generous) SLO changes accounting, never numerics:
+    logits stay bitwise-equal to the direct forward and every deadline
+    is counted hit."""
+    from repro.models import vgg
+    from repro.serve.vision import VisionEngine
+    rng = np.random.default_rng(9)
+    imgs = _requests(rng, (1, 3, 2))
+    eng = VisionEngine(vgg_params, vgg.to_graph(), img=IMG, policy="auto",
+                       buckets=(2, 4))
+    reqs = [eng.submit(im, deadline_s=300.0) for im in imgs]
+    m = eng.run()
+    assert m.deadline_total == 3 and m.deadline_hits == 3
+    assert m.deadline_hit_rate == 1.0
+    for req, im in zip(reqs, imgs):
+        direct = vgg.compile_forward(vgg_params, img=IMG,
+                                     batch=im.shape[0], policy="auto",
+                                     cache=eng.compiler.cache)
+        want = np.asarray(direct(vgg_params, jnp.asarray(im)))
+        assert req.deadline_met is True
+        np.testing.assert_array_equal(req.logits, want)
+
+
 def test_queue_drain_order_is_fifo(vgg_params):
     from repro.models import vgg
     from repro.serve.vision import VisionEngine
@@ -317,12 +340,19 @@ def test_serving_summary_emits_all_metrics(tmp_path):
                         policy="auto", buckets=(1, 2, 4), seed=7)
     for k in ("images", "requests", "batches", "kips", "latency",
               "slot_occupancy", "per_bucket_batches", "compile",
-              "workload"):
+              "workload", "robustness"):
         assert k in d, k
     assert d["requests"] == 6 and d["images"] >= 6
     assert d["workload"]["model"] == "vgg16"
     assert d["compile"]["distinct_schedules"] == 8
     assert set(d["latency"]) == {"p50_s", "p95_s", "p99_s", "mean_s"}
+    # a healthy deadline-free run: every request ok, nothing shed or
+    # degraded, nothing lost, and a deterministic 1.0 deadline hit rate
+    rb = d["robustness"]
+    assert rb["outcomes"] == {"ok": 6} and rb["submitted"] == 6
+    assert rb["shed"] == rb["expired"] == rb["failed"] == 0
+    assert rb["degraded_batches"] == 0 and rb["lost_requests"] == 0
+    assert rb["deadline_hit_rate"] == 1.0
 
 
 def test_merge_bench_json_per_model_keys(tmp_path):
