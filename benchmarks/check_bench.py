@@ -25,6 +25,12 @@ Three metric classes, three disciplines:
   deterministically 1.0), and ``lost_requests`` gates in **exact** at 0
   (the zero-loss invariant: every submitted request reaches a terminal
   outcome).
+* **observability** — the streaming fold counters' modeled PE-array
+  utilization per model (``obs/folds.py``).  ``util_model_pct`` is a pure
+  function of the chosen schedules and the PE array — analytic, not
+  measured — so it transfers across machines and gates as an absolute
+  floor: a drop means the planner started picking schedules that map the
+  loop nest onto the array worse than before.
 
 A fresh metric with no baseline entry fails the gate too (it means the
 baseline predates the metric — re-baseline deliberately, not silently).
@@ -59,7 +65,8 @@ def extract(bench: dict) -> dict:
     """Distill the gated metrics out of a full bench snapshot.  The
     baseline file stores exactly this distillation (stable under bench
     sections the gate doesn't police)."""
-    out = {"exact": {}, "latency": {}, "throughput": {}, "robustness": {}}
+    out = {"exact": {}, "latency": {}, "throughput": {}, "robustness": {},
+           "observability": {}}
 
     def model_section(name: str, sec: dict) -> None:
         fr = sec.get("fold_reuse", {})
@@ -94,6 +101,10 @@ def extract(bench: dict) -> dict:
         if "deadline_hit_rate" in rb:
             out["robustness"][f"serving.{m}.deadline_hit_rate"] = \
                 float(rb["deadline_hit_rate"])
+        util = (sec.get("observability") or {}).get("util_model_pct")
+        if util is not None:
+            out["observability"][f"serving.{m}.util_model_pct"] = \
+                float(util)
     return out
 
 
@@ -107,7 +118,7 @@ def validate_baseline(baseline) -> list:
         return [f"baseline must be a JSON object, got "
                 f"{type(baseline).__name__}"]
     known = {"exact": int, "latency": float, "throughput": float,
-             "robustness": float}
+             "robustness": float, "observability": float}
     for section, want in known.items():
         sec = baseline.get(section)
         if sec is None:
@@ -136,7 +147,8 @@ def validate_baseline(baseline) -> list:
                                 f"{value!r}")
     for section in sorted(set(baseline) - set(known)):
         problems.append(f"unknown section {section!r} (want exact / "
-                        f"latency / throughput / robustness)")
+                        f"latency / throughput / robustness / "
+                        f"observability)")
     return problems
 
 
@@ -179,9 +191,22 @@ def compare(fresh: dict, baseline: dict, tol: float) -> list:
                           f"{got:.4f} vs baseline floor {base:.4f} — "
                           "the serving runtime is missing deadlines it "
                           "used to hit"))
+    # modeled utilization is analytic (schedules + PE array, no clock),
+    # so it also floors absolutely: a drop means worse schedule choices
+    for metric, base in sorted(baseline["observability"].items()):
+        got = fresh["observability"].get(metric)
+        if got is None:
+            fails.append(("observability", metric,
+                          "missing from fresh bench"))
+        elif got < base:
+            fails.append(("observability", metric,
+                          f"{got:.2f}% vs baseline floor {base:.2f}% — "
+                          "the planner picked schedules that utilize the "
+                          "PE array worse than baseline"))
     # a metric the baseline has never seen means the baseline rotted —
     # every class, or a new model's metrics would be silently ungated
-    for kind in ("exact", "latency", "throughput", "robustness"):
+    for kind in ("exact", "latency", "throughput", "robustness",
+                 "observability"):
         for metric in sorted(fresh[kind]):
             if metric not in baseline.get(kind, {}):
                 fails.append((kind, metric,
@@ -229,7 +254,8 @@ def main(argv=None) -> int:
 
     fails = compare(fresh, baseline, args.latency_tolerance)
     n_checked = sum(len(baseline[k]) for k in
-                    ("exact", "latency", "throughput", "robustness"))
+                    ("exact", "latency", "throughput", "robustness",
+                     "observability"))
     if fails:
         print(f"PERF GATE: {len(fails)}/{n_checked} checks failed "
               f"(tolerance {args.latency_tolerance * 100:.0f}%):",

@@ -842,7 +842,8 @@ def compile_network(params: Dict[str, Any],
                     tuning_path: Optional[str] = None,
                     autotune_reps: int = 3,
                     autotune_timer: Optional[Callable] = None,
-                    verify: bool = True
+                    verify: bool = True,
+                    tracer=None
                     ) -> CompiledNetwork:
     """Lower a streaming graph into a static fold schedule + jitted forward.
 
@@ -893,6 +894,12 @@ def compile_network(params: Dict[str, Any],
     # explicit None-check: an empty ScheduleCache is falsy (len 0) but
     # must still be used, so its stats/schedules reach the caller
     cache = cache if cache is not None else ScheduleCache()
+    # ``tracer`` is duck-typed (obs/trace.py:Tracer) so the core layer
+    # never imports the observability layer; spans are recorded with
+    # explicit timestamps (add_span), which leaves no dangling state if
+    # a GraphError aborts the compile mid-walk.  tid 3 is the compile
+    # track (obs.trace.TID_COMPILE).
+    _tc0 = float(tracer.clock()) if tracer is not None else 0.0
     mode, interpret = resolve_execution(policy)
     stats_before = dataclasses.replace(cache.stats)
     if autotune and tuning_path and os.path.exists(tuning_path):
@@ -949,6 +956,7 @@ def compile_network(params: Dict[str, Any],
                     raise GraphError(
                         f"{nd.name}: fused shortcut {nd.residual!r} has "
                         f"shape {got}, conv output is {want}")
+            _tp0 = float(tracer.clock()) if tracer is not None else 0.0
             if autotune:
                 # measurements always run the fold kernels under the
                 # backend's own interpret policy (reference mode's
@@ -961,6 +969,12 @@ def compile_network(params: Dict[str, Any],
                     epilogue=epi, timer=autotune_timer)
             else:
                 sched = cache.schedule_for(cv)
+            if tracer is not None:
+                tracer.add_span(f"plan:{nd.name}", "compile", 3, _tp0,
+                                float(tracer.clock()) - _tp0,
+                                schedule=str(sched.key),
+                                dataflow=sched.dataflow,
+                                source=sched.source)
             if verify and mode == "pallas":
                 _verify_schedule(nd.name, cv, sched, epi, groups)
             layer_schedules.append((nd.name, sched))
@@ -1090,6 +1104,13 @@ def compile_network(params: Dict[str, Any],
         misses=cache.stats.misses - stats_before.misses,
         replans=cache.stats.replans - stats_before.replans)
     apply = jax.jit(forward) if jit else forward
+    if tracer is not None:
+        tracer.add_span("compile_network", "compile", 3, _tc0,
+                        float(tracer.clock()) - _tc0, mode=mode,
+                        batch=int(input_shape[0]),
+                        conv_layers=len(layer_schedules),
+                        distinct_schedules=len(
+                            {s.key for _, s in layer_schedules}))
     return CompiledNetwork(apply=apply,
                            layer_schedules=tuple(layer_schedules),
                            build_stats=build_stats, cache=cache,
@@ -1126,7 +1147,7 @@ class BucketCompiler:
                  tuning_path: Optional[str] = None,
                  autotune_reps: int = 3,
                  autotune_timer: Optional[Callable] = None,
-                 verify: bool = True):
+                 verify: bool = True, tracer=None):
         self.params = params
         self.graph = as_graph(graph)
         self.img = int(img)
@@ -1141,6 +1162,7 @@ class BucketCompiler:
         self.autotune_reps = autotune_reps
         self.autotune_timer = autotune_timer
         self.verify = verify
+        self.tracer = tracer          # duck-typed obs tracer (or None)
         self._nets: Dict[int, CompiledNetwork] = {}
 
     @property
@@ -1166,7 +1188,8 @@ class BucketCompiler:
                 jit=self.jit, fuse_epilogues=self.fuse_epilogues,
                 autotune=self.autotune, tuning_path=self.tuning_path,
                 autotune_reps=self.autotune_reps,
-                autotune_timer=self.autotune_timer, verify=self.verify)
+                autotune_timer=self.autotune_timer, verify=self.verify,
+                tracer=self.tracer)
             self._nets[batch] = net
         return net
 

@@ -89,11 +89,59 @@ def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json",
     print(f"# wrote {section} metrics into {path} under {key!r}")
 
 
+def make_obs(args):
+    """(tracer, registry) per the ``--trace`` / ``--metrics-json`` flags
+    — ``None`` for whichever is off, so the serving hot paths keep their
+    no-op recorders."""
+    tracer = registry = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer(time.monotonic)
+    if args.metrics_json:
+        from repro.obs.metrics import MetricsRegistry
+        registry = MetricsRegistry()
+    return tracer, registry
+
+
+def lint_into_registry(registry, model: str, *, img: int,
+                       width_mult: float) -> None:
+    """Fold the static verifier's finding counts into the registry so one
+    snapshot carries perf + robustness + lint health."""
+    from repro.analysis.foldlint import lint_model
+    summary = lint_model(model, img=img, width_mult=width_mult)
+    rep = summary["report"]
+    by_sev = {}
+    for f in rep["findings"]:
+        by_sev[f["severity"]] = by_sev.get(f["severity"], 0) + 1
+    for sev in ("error", "warning", "info"):
+        registry.counter("foldlint_findings_total",
+                         "Static verifier findings by severity",
+                         severity=sev).set_total(by_sev.get(sev, 0))
+    registry.gauge("foldlint_ok", "1 when no error-severity findings"
+                   ).set(1.0 if summary["ok"] else 0.0)
+
+
+def write_obs_artifacts(args, tracer, registry) -> None:
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"# wrote Chrome trace ({len(tracer.events)} events) "
+              f"to {args.trace}")
+    if registry is not None:
+        lint_into_registry(registry, args.model, img=args.img,
+                           width_mult=args.width)
+        with open(args.metrics_json, "w") as f:
+            json.dump(registry.snapshot(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote metrics snapshot ({len(registry)} series) "
+              f"to {args.metrics_json}")
+
+
 def chaos_main(args) -> dict:
     """The deterministic fault-injection smoke: serve under an injected
     fault schedule, verify every recovery invariant, exit nonzero on any
     violation (``ChaosVerificationError`` propagates to the caller)."""
     from repro.serve.chaos import chaos_summary
+    tracer, registry = make_obs(args)
     summary = chaos_summary(
         args.model, profile=args.chaos_profile, seed=args.chaos,
         requests=args.requests, img=args.img, width_mult=args.width,
@@ -101,7 +149,9 @@ def chaos_main(args) -> dict:
         buckets=tuple(int(b) for b in args.buckets.split(",")),
         deadline_s=args.deadline_s if args.deadline_s > 0 else 0.001,
         deadline_every=args.deadline_every,
-        hang_timeout_s=args.hang_timeout_s, verbose=True)
+        hang_timeout_s=args.hang_timeout_s, tracer=tracer,
+        registry=registry, verbose=True)
+    write_obs_artifacts(args, tracer, registry)
     merge_bench_json(summary, args.bench_json, model=args.model,
                      section="chaos")
     return summary
@@ -118,6 +168,7 @@ def vision_main(args) -> dict:
         data, model_par = (int(t) for t in args.mesh.lower().split("x"))
         mesh = make_local_mesh(data, model_par)
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    tracer, registry = make_obs(args)
     with PreemptionGuard() as guard:    # SIGTERM -> stop admitting, drain
         summary = serving_summary(
             args.model, requests=args.requests, img=args.img,
@@ -126,7 +177,8 @@ def vision_main(args) -> dict:
             autotune=args.autotune, tuning_path=args.tuning_path or None,
             deadline_s=args.deadline_s or None,
             deadline_every=args.deadline_every,
-            guard=guard, verbose=True)
+            guard=guard, tracer=tracer, registry=registry, verbose=True)
+    write_obs_artifacts(args, tracer, registry)
     merge_bench_json(summary, args.bench_json, model=args.model)
     return summary
 
@@ -190,6 +242,13 @@ def main():
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--tuning-path", default="")
     ap.add_argument("--bench-json", default="BENCH_vgg.json")
+    # observability (DESIGN.md §11)
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write a Chrome trace-event JSON of the full "
+                         "request lifecycle (open in Perfetto)")
+    ap.add_argument("--metrics-json", default="", metavar="PATH",
+                    help="write the bounded metrics-registry snapshot "
+                         "(perf + robustness + foldlint health)")
     # robustness / fault injection
     ap.add_argument("--deadline-s", type=float, default=0.0,
                     help="per-request SLO in seconds (0 = no deadlines); "

@@ -132,7 +132,7 @@ class AdmissionController:
     """
 
     def __init__(self, widths: Sequence[int], *, alpha: float = 0.25,
-                 slack: float = 1.0):
+                 slack: float = 1.0, registry=None):
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"EWMA alpha must be in (0, 1], got {alpha}")
         self.widths: Tuple[int, ...] = tuple(widths)
@@ -140,6 +140,10 @@ class AdmissionController:
         self.slack = slack
         self._ewma: Dict[int, float] = {}
         self.observations = 0
+        # optional live metrics (obs/metrics.py MetricsRegistry): the
+        # per-bucket EWMAs as gauges, admit/shed decisions as counters.
+        # None (the default) costs one attribute check per call.
+        self.registry = registry
 
     def observe(self, bucket: int, service_s: float) -> None:
         """Fold one measured batch service time into the bucket's EWMA."""
@@ -148,6 +152,11 @@ class AdmissionController:
         self._ewma[bucket] = (service_s if prev is None
                               else prev + self.alpha * (service_s - prev))
         self.observations += 1
+        if self.registry is not None:
+            self.registry.gauge(
+                "admission_service_ewma_seconds",
+                "Measured per-bucket batch service EWMA",
+                bucket=str(bucket)).set(self._ewma[bucket])
 
     def estimate_s(self, bucket: int) -> Optional[float]:
         """Best service-time estimate for ``bucket``: its own EWMA, else
@@ -179,9 +188,13 @@ class AdmissionController:
         is relative seconds from now; ``None`` means no SLO — always
         admitted."""
         predicted = self.predicted_wait_s(pending_images, n)
-        if deadline_s is None:
-            return True, predicted
-        return self.slack * predicted <= deadline_s, predicted
+        ok = (deadline_s is None
+              or self.slack * predicted <= deadline_s)
+        if self.registry is not None:
+            self.registry.counter(
+                "admission_decisions_total", "Admission outcomes",
+                decision="admitted" if ok else "shed").inc()
+        return ok, predicted
 
 
 @dataclasses.dataclass(frozen=True)

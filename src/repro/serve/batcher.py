@@ -43,6 +43,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER, TID_ENGINE
 from repro.serve.admission import (BadRequestError, RequestOutcome,
                                    validate_images)
 
@@ -186,7 +187,8 @@ class ImageBatcher:
 
     def __init__(self, policy: BucketPolicy, img: int, chan: int = 3,
                  dtype=np.float32,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer=None):
         self.policy = policy
         self.img = int(img)
         self.chan = int(chan)
@@ -194,6 +196,7 @@ class ImageBatcher:
         self.queue: List[ImageRequest] = []
         self.expired: List[ImageRequest] = []   # drained by the engine
         self._clock = clock
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._next_rid = 0
 
     def __len__(self) -> int:
@@ -235,6 +238,9 @@ class ImageBatcher:
             if req.t_deadline is not None and now > req.t_deadline:
                 req.finish(RequestOutcome.EXPIRED, t=now,
                            error="deadline passed before batch formation")
+                self.tracer.instant("expire", cat="error", tid=TID_ENGINE,
+                                    request_id=req.rid,
+                                    overshoot_s=now - req.t_deadline)
                 self.expired.append(req)
             else:
                 live.append(req)

@@ -39,6 +39,8 @@ from typing import Callable, Dict, List, Mapping, Optional
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER, TID_DISPATCH
+
 __all__ = ["Fault", "ChaosKernelFault", "ChaosInjector", "PROFILES",
            "PROFILE_EXPECTATIONS", "chaos_summary",
            "ChaosVerificationError"]
@@ -85,7 +87,8 @@ class ChaosInjector:
     def __init__(self, schedule: Optional[Mapping[int, Fault]] = None, *,
                  fault_on_nan_input: bool = False,
                  sleep: Callable[[float], None] = time.sleep,
-                 profile: Optional[str] = None, seed: Optional[int] = None):
+                 profile: Optional[str] = None, seed: Optional[int] = None,
+                 tracer=None):
         self.schedule: Dict[int, Fault] = dict(schedule or {})
         self.fault_on_nan_input = fault_on_nan_input
         self._sleep = sleep
@@ -94,6 +97,10 @@ class ChaosInjector:
         self.dispatches = 0
         self.injected: Dict[str, int] = {"kernel": 0, "nan": 0, "slow": 0,
                                          "poison": 0}
+        # every fired fault also lands in the trace as an error-tagged
+        # instant event; the engine wires its tracer in when it adopts
+        # the injector (NULL_TRACER default = no-op)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     @classmethod
     def from_profile(cls, profile: str, seed: int, *, period: int = 3,
@@ -147,6 +154,8 @@ class ChaosInjector:
         if self.fault_on_nan_input and not np.isfinite(
                 np.asarray(x)).all():
             self.injected["poison"] += 1
+            self.tracer.instant("chaos.poison", cat="error",
+                                tid=TID_DISPATCH, stream=stream)
             raise ChaosKernelFault(
                 "kernel fault on poisoned (non-finite) input")
         fault = None
@@ -155,6 +164,10 @@ class ChaosInjector:
             self.dispatches += 1
         if fault is None:
             return fn(x)
+        self.tracer.instant(f"chaos.{fault.kind}", cat="error",
+                            tid=TID_DISPATCH,
+                            dispatch=self.dispatches - 1,
+                            error=f"injected {fault.kind} fault")
         if fault.kind == "kernel":
             self.injected["kernel"] += 1
             raise ChaosKernelFault(
@@ -237,7 +250,8 @@ def chaos_summary(model: str, *, profile: str, seed: int,
                   policy: str = "pallas", buckets=(1, 2, 4, 8),
                   deadline_s: float = 0.001, deadline_every: int = 3,
                   hang_timeout_s: float = 0.15, slow_s: float = 0.4,
-                  period: int = 3, verbose: bool = False) -> dict:
+                  period: int = 3, tracer=None, registry=None,
+                  verbose: bool = False) -> dict:
     """Run the deterministic chaos smoke: a mixed-size request stream with
     periodic deadlines, served under an injected fault schedule, then
     verified against every recovery invariant (``verify_chaos_run``).
@@ -263,7 +277,8 @@ def chaos_summary(model: str, *, profile: str, seed: int,
                                        period=period)
     engine = VisionEngine(params, spec.to_graph(), img=img, policy=policy,
                           buckets=buckets, chaos=chaos,
-                          hang_timeout_s=hang_timeout_s)
+                          hang_timeout_s=hang_timeout_s, tracer=tracer,
+                          registry=registry)
     engine.warmup()
     rng = np.random.default_rng(seed)
     max_n = engine.batcher.policy.max_width
@@ -284,6 +299,8 @@ def chaos_summary(model: str, *, profile: str, seed: int,
         raise ChaosVerificationError(
             f"chaos run ({model}, {profile}, seed {seed}) violated "
             f"{len(problems)} invariant(s):\n  " + "\n  ".join(problems))
+    if registry is not None:
+        engine.snapshot_registry(registry)
     d = engine.metrics_dict()
     d["chaos"] = chaos.describe()
     d["workload"] = {"model": model, "profile": profile, "seed": seed,

@@ -50,12 +50,27 @@ import numpy as np
 
 from repro.core.engine import BucketCompiler, ScheduleCache
 from repro.core.mapping import serving_conv_plan
+from repro.obs.folds import FoldStreamCounters
+from repro.obs.metrics import LogHistogram, MetricsRegistry
+from repro.obs.trace import (NULL_TRACER, REQ_TID0, TID_COMPLETE,
+                             TID_DISPATCH, TID_ENGINE)
 from repro.serve.admission import (AdmissionController, DispatchWatchdog,
                                    RequestOutcome)
 from repro.serve.batcher import (BucketPolicy, FormedBatch, ImageBatcher,
                                  ImageRequest)
 
 __all__ = ["ServingMetrics", "VisionEngine", "serving_summary"]
+
+
+def _latency_hist() -> LogHistogram:
+    """1µs .. 10ks range — any serving latency this host can produce."""
+    return LogHistogram(lo=1e-6, hi=1e4, buckets_per_decade=48)
+
+
+def _occupancy_hist() -> LogHistogram:
+    """Slot occupancy lives in (0, 1]; a tight range keeps the relative
+    bucket error well under the rounding the JSON applies."""
+    return LogHistogram(lo=1e-3, hi=2.0, buckets_per_decade=48)
 
 
 @dataclasses.dataclass
@@ -71,8 +86,15 @@ class ServingMetrics:
     requests: int = 0
     batches: int = 0
     elapsed_s: float = 0.0
-    latencies_s: List[float] = dataclasses.field(default_factory=list)
-    occupancies: List[float] = dataclasses.field(default_factory=list)
+    # bounded log-bucketed histograms (``obs/metrics.py``), not lists: a
+    # long-lived serving process records millions of completions and the
+    # metrics footprint must not grow with traffic.  Exact count/sum/min/
+    # max ride along, so means are exact and only the percentiles carry
+    # the (≤ one bucket width, ~4.9%) quantization error.
+    latency_hist: LogHistogram = dataclasses.field(
+        default_factory=_latency_hist)
+    occupancy_hist: LogHistogram = dataclasses.field(
+        default_factory=_occupancy_hist)
     per_bucket: Dict[int, int] = dataclasses.field(default_factory=dict)
     # -- robustness (DESIGN.md §10) ---------------------------------------
     submitted: int = 0            # requests entering the engine (any fate)
@@ -95,8 +117,7 @@ class ServingMetrics:
 
     @property
     def slot_occupancy(self) -> float:
-        return (sum(self.occupancies) / len(self.occupancies)
-                if self.occupancies else 0.0)
+        return self.occupancy_hist.mean
 
     @property
     def deadline_hit_rate(self) -> float:
@@ -106,13 +127,16 @@ class ServingMetrics:
                 if self.deadline_total else 1.0)
 
     def latency_percentiles(self) -> Dict[str, float]:
-        if not self.latencies_s:
+        """Same keys and rounding as the original list-backed version
+        (the ``check_bench`` baselines compare these); percentiles now
+        come from the bounded histogram, the mean stays exact."""
+        h = self.latency_hist
+        if not h.count:
             return {"p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0, "mean_s": 0.0}
-        lat = np.asarray(self.latencies_s)
-        return {"p50_s": round(float(np.percentile(lat, 50)), 6),
-                "p95_s": round(float(np.percentile(lat, 95)), 6),
-                "p99_s": round(float(np.percentile(lat, 99)), 6),
-                "mean_s": round(float(lat.mean()), 6)}
+        return {"p50_s": round(h.percentile(50), 6),
+                "p95_s": round(h.percentile(95), 6),
+                "p99_s": round(h.percentile(99), 6),
+                "mean_s": round(h.mean, 6)}
 
     def as_dict(self) -> dict:
         return {
@@ -185,7 +209,11 @@ class VisionEngine:
                  tuning_path: Optional[str] = None,
                  autotune_timer: Optional[Callable] = None,
                  chaos=None, hang_timeout_s: float = 30.0,
-                 admission: Optional[AdmissionController] = None):
+                 admission: Optional[AdmissionController] = None,
+                 tracer=None, registry: Optional[MetricsRegistry] = None,
+                 fold_pe=None):
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.registry = registry
         bucket_policy = BucketPolicy(buckets)
         self.mesh = mesh
         self._x_sharding = None
@@ -207,18 +235,28 @@ class VisionEngine:
                                     vision_shardings(params, mesh, self.plan))
             self._x_sharding = vision_batch_sharding(mesh, self.plan)
         self.params = params
-        self.batcher = ImageBatcher(bucket_policy, img, chan)
+        self.batcher = ImageBatcher(bucket_policy, img, chan,
+                                    tracer=self.tracer)
         self.compiler = BucketCompiler(
             params, graph, img, chan=chan, policy=policy, cache=cache,
             head=head, fuse_epilogues=fuse_epilogues, autotune=autotune,
-            tuning_path=tuning_path, autotune_timer=autotune_timer)
+            tuning_path=tuning_path, autotune_timer=autotune_timer,
+            tracer=self.tracer if self.tracer.enabled else None)
         self.metrics = ServingMetrics()
         self.chaos = chaos
+        if chaos is not None and getattr(chaos, "tracer", None) in \
+                (None, NULL_TRACER):
+            chaos.tracer = self.tracer   # injected faults land in the trace
         self.admission = admission if admission is not None else \
-            AdmissionController(bucket_policy.widths)
+            AdmissionController(bucket_policy.widths, registry=registry)
         self.watchdog = DispatchWatchdog(bucket_policy.widths,
                                          hang_timeout_s=hang_timeout_s)
         self._ref_compiler: Optional[BucketCompiler] = None
+        # per-ScheduleKey streaming counters (obs/folds.py).  Always on:
+        # the per-batch cost is O(conv layers) float ops, noise next to a
+        # forward; tracing alone stays behind the NULL_TRACER check.
+        self.folds = FoldStreamCounters(pe=fold_pe)
+        self._req_spans: Dict[int, Any] = {}   # rid -> open lifetime span
 
     # -- request side ------------------------------------------------------
     def submit(self, images: np.ndarray,
@@ -230,18 +268,37 @@ class VisionEngine:
         measured queue already blows is *returned un-queued* with
         ``outcome == REJECTED`` (counted ``shed``) — load shedding is a
         terminal outcome the caller observes, not an exception."""
-        req = self.batcher.make_request(images, deadline_s)
+        tr = self.tracer
+        sub = tr.begin("submit", tid=TID_ENGINE)
+        try:
+            req = self.batcher.make_request(images, deadline_s)
+        except Exception as e:
+            # malformed payload: no request object, no lifetime span
+            tr.end(sub, error=repr(e))
+            raise
         self.metrics.submitted += 1
+        if tr.enabled:
+            # the request's lifetime span, on its own track; closed with
+            # the terminal outcome in ``_account`` — the zero-loss
+            # invariant, visible in the trace
+            self._req_spans[req.rid] = tr.begin(
+                f"request-{req.rid}", cat="request",
+                tid=REQ_TID0 + req.rid, request_id=req.rid,
+                n_images=req.n, deadline_s=deadline_s)
+        adm = tr.begin("admit", tid=TID_ENGINE)
         ok, predicted = self.admission.admit(
             req.n, self.batcher.pending_images, deadline_s)
+        tr.end(adm, admitted=ok, predicted_wait_s=predicted)
         if not ok:
             req.finish(RequestOutcome.REJECTED,
                        error=f"admission: predicted wait {predicted:.4f}s "
                              f"exceeds deadline {deadline_s:.4f}s")
             self.metrics.shed += 1
             self._account(req)
+            tr.end(sub, request_id=req.rid, shed=True)
             return req
         self.batcher.queue.append(req)
+        tr.end(sub, request_id=req.rid, shed=False)
         return req
 
     @property
@@ -259,6 +316,10 @@ class VisionEngine:
             m.deadline_total += 1
             if req.deadline_met:
                 m.deadline_hits += 1
+        span = self._req_spans.pop(req.rid, None)
+        if span is not None:
+            self.tracer.end(span, outcome=key, served_by=req.served_by,
+                            **({"error": req.error} if req.error else {}))
 
     def _drain_expired(self) -> None:
         for req in self.batcher.expired:
@@ -271,10 +332,15 @@ class VisionEngine:
         """Form the next batch and start its host→device transfer (an
         async ``device_put`` — the front half of the double buffer).
         Form-time deadline expiries are accounted here."""
+        span = self.tracer.begin("form", tid=TID_ENGINE)
         fb = self.batcher.form()
         self._drain_expired()
         if fb is None:
+            self.tracer.end(span, discard=True)   # idle poll: no noise
             return None
+        self.tracer.end(span, bucket=fb.bucket, n_images=fb.n_images,
+                        n_requests=len(fb.requests),
+                        occupancy=fb.occupancy)
         # one transfer, straight to the (possibly sharded) device layout —
         # never commit to the default device first and reshard
         if self._x_sharding is not None:
@@ -291,18 +357,23 @@ class VisionEngine:
         feeding and recovery happens at completion time."""
         fb, x = staged
         net = self.compiler.network_for(fb.bucket)
+        span = self.tracer.begin("dispatch", tid=TID_DISPATCH,
+                                 bucket=fb.bucket, n_images=fb.n_images)
         t0 = time.monotonic()
         try:
             if self.chaos is not None:
                 out = self.chaos.call(lambda a: net(self.params, a), x)
             else:
                 out = net(self.params, x)
+            self.tracer.end(span)
             return fb, out, t0, None
         except Exception as e:
+            self.tracer.end(span, error=repr(e))
             return fb, None, t0, e
 
     def _complete(self, inflight, record: bool = True) -> None:
         fb, out, t0, exc = inflight
+        tr = self.tracer
         logits = None
         if exc is None:
             try:
@@ -318,11 +389,34 @@ class VisionEngine:
             m.hung_batches += verdict.hung
             m.straggler_events += verdict.straggler
             m.batches += 1
-            m.occupancies.append(fb.occupancy)
+            m.occupancy_hist.record(fb.occupancy)
             m.per_bucket[fb.bucket] = m.per_bucket.get(fb.bucket, 0) + 1
+        # the measured device interval: dispatch start -> readback done.
+        # Per-layer children carve it up by each layer's share of the
+        # modeled T_Ops (the forward is one opaque jitted call), tagged
+        # ``apportioned`` so nobody mistakes them for measurements.
+        kernel_id = None
+        if tr.enabled:
+            kernel_id = tr.add_span(
+                "kernel", "device", TID_DISPATCH, t0, duration,
+                bucket=fb.bucket, n_images=fb.n_images,
+                **({"error": repr(exc)} if exc is not None else {}))
+        if record and exc is None:
+            net = self.compiler.network_for(fb.bucket)
+            parts = self.folds.observe_dispatch(
+                net.layer_schedules, fb.n_images, duration)
+            if tr.enabled:
+                ts = t0
+                for name, key, dur in parts:
+                    tr.add_span(name, "layer", TID_DISPATCH, ts, dur,
+                                parent=kernel_id, schedule=key,
+                                apportioned=True)
+                    ts += dur
         if exc is None and not np.isfinite(logits[:fb.n_images]).all():
             if record:
                 m.nonfinite_batches += 1
+            tr.instant("nonfinite", cat="error", tid=TID_DISPATCH,
+                       bucket=fb.bucket)
             exc = _NonFiniteOutput(
                 f"primary batch (bucket {fb.bucket}) produced non-finite "
                 "logits")
@@ -331,13 +425,19 @@ class VisionEngine:
                 m.degraded_batches += 1
             self._serve_degraded(list(fb.requests), record=record)
             return
+        epi = tr.begin("epilogue", tid=TID_COMPLETE, bucket=fb.bucket)
         ImageBatcher.scatter(fb, logits, t_done)
         if record:
             m.images += fb.n_images
             m.requests += len(fb.requests)
-            m.latencies_s.extend(r.latency_s for r in fb.requests)
+            for r in fb.requests:
+                m.latency_hist.record(r.latency_s)
+        tr.end(epi)
+        comp = tr.begin("complete", tid=TID_COMPLETE,
+                        n_requests=len(fb.requests))
         for req in fb.requests:
             self._account(req)
+        tr.end(comp)
 
     # -- degradation ladder ------------------------------------------------
     @property
@@ -386,6 +486,8 @@ class VisionEngine:
         """The ladder below a failed primary batch: reference retry, then
         recursive bisection, then single-request quarantine.  Every
         request in ``reqs`` is terminal when this returns."""
+        tr = self.tracer
+        span = tr.begin("degrade", tid=TID_COMPLETE, n_requests=len(reqs))
         try:
             logits = self._reference_forward(reqs)
         except Exception as e:
@@ -395,11 +497,15 @@ class VisionEngine:
                            error=f"quarantined: {type(e).__name__}: {e}")
                 if record:
                     self.metrics.failed += 1
+                tr.instant("quarantine", cat="error", tid=TID_COMPLETE,
+                           request_id=req.rid, error=repr(e))
                 self._account(req)
+                tr.end(span, error=repr(e), quarantined=req.rid)
                 return
             mid = (len(reqs) + 1) // 2     # bisect: isolate the poison
             self._serve_degraded(reqs[:mid], record=record)
             self._serve_degraded(reqs[mid:], record=record)
+            tr.end(span, error=repr(e), bisected=True)
             return
         t_done = time.monotonic()
         m = self.metrics
@@ -414,13 +520,17 @@ class VisionEngine:
                 if record:
                     m.images += req.n
                     m.requests += 1
-                    m.latencies_s.append(req.latency_s)
+                    m.latency_hist.record(req.latency_s)
             else:
                 req.finish(RequestOutcome.FAILED, t=t_done,
                            error="quarantined: non-finite reference output")
                 if record:
                     m.failed += 1
+                tr.instant("quarantine", cat="error", tid=TID_COMPLETE,
+                           request_id=req.rid,
+                           error="non-finite reference output")
             self._account(req)
+        tr.end(span, served_by="reference")
 
     def warmup(self) -> List[int]:
         """Compile and run every bucket width once on zeros, so serving
@@ -487,7 +597,68 @@ class VisionEngine:
             self.metrics.submitted - terminal - self.pending)
         if self.chaos is not None:
             d["robustness"]["chaos_injected"] = dict(self.chaos.injected)
+        # the live per-ScheduleKey table (obs/folds.py): model-side eq-10
+        # utilization + modeled bytes joined with measured dispatch time
+        d["observability"] = self.folds.as_dict()
         return d
+
+    def snapshot_registry(self, registry: Optional[MetricsRegistry] = None
+                          ) -> MetricsRegistry:
+        """Sync every serving counter into a metrics registry
+        (``obs/metrics.py``) — one snapshot carrying perf + robustness +
+        fold-reuse + chaos health.  Sync happens here, at snapshot time,
+        so the serving hot path never touches the registry."""
+        reg = registry if registry is not None else \
+            (self.registry or MetricsRegistry())
+        m = self.metrics
+        c = reg.counter
+        c("serve_requests_submitted_total",
+          "Requests entering the engine (any fate)").set_total(m.submitted)
+        for outcome, n in sorted(m.outcomes.items()):
+            c("serve_requests_total", "Terminal requests by outcome",
+              outcome=outcome).set_total(n)
+        c("serve_images_total", "Images served OK").set_total(m.images)
+        c("serve_batches_total", "Primary batches completed"
+          ).set_total(m.batches)
+        for name, help_ in (("shed", "Admission-rejected at submit"),
+                            ("expired", "Deadline passed before forming"),
+                            ("failed", "Quarantined requests"),
+                            ("degraded_batches", "Primary -> reference"),
+                            ("nonfinite_batches", "Non-finite primary out"),
+                            ("hung_batches", "Dispatch over hang timeout"),
+                            ("straggler_events", "Straggling bucket lanes"),
+                            ("deadline_total", "Terminal with an SLO"),
+                            ("deadline_hits", "SLO met")):
+            c(f"serve_{name}_total", help_).set_total(getattr(m, name))
+        g = reg.gauge
+        g("serve_kips", "Measured kilo-images per second").set(m.kips)
+        g("serve_deadline_hit_rate", "SLO hit fraction"
+          ).set(m.deadline_hit_rate)
+        g("serve_pending_requests", "Still queued").set(self.pending)
+        cs = self.compiler.cache.stats
+        c("schedule_cache_hits_total", "Fold-reuse hits").set_total(cs.hits)
+        c("schedule_cache_misses_total", "Schedules planned"
+          ).set_total(cs.misses)
+        c("schedule_cache_replans_total", "Geometry replans"
+          ).set_total(cs.replans)
+        g("schedule_cache_hit_rate", "Fold-reuse rate").set(cs.hit_rate)
+        reg.register_histogram("serve_latency_seconds", m.latency_hist,
+                               "End-to-end request latency")
+        reg.register_histogram("serve_slot_occupancy", m.occupancy_hist,
+                               "Real rows / bucket width per batch")
+        if self.chaos is not None:
+            for kind, n in sorted(self.chaos.injected.items()):
+                c("chaos_injected_total", "Faults fired by the injector",
+                  kind=kind).set_total(n)
+        for row in self.folds.rows():
+            g("fold_util_model_pct", "eq-10 model PE utilization",
+              schedule=row["key"]).set(row["util_model_pct"])
+            g("fold_achieved_vs_model_pct",
+              "Measured GFLOP/s over eq-12 model GFLOP/s",
+              schedule=row["key"]).set(row["achieved_vs_model_pct"])
+        c("admission_observations_total", "Batch service-time samples"
+          ).set_total(self.admission.observations)
+        return reg
 
 
 def serving_summary(model: str, *, requests: int = 32, img: int = 32,
@@ -498,6 +669,8 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
                     deadline_s: Optional[float] = None,
                     deadline_every: int = 1,
                     guard=None,
+                    tracer=None,
+                    registry: Optional[MetricsRegistry] = None,
                     verbose: bool = False) -> dict:
     """Serve a deterministic mixed-size random request stream through a
     reduced-width registered model (``models/zoo.py``) and return the
@@ -516,7 +689,8 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
                               img=img, classes=classes)
     engine = VisionEngine(params, spec.to_graph(), img=img, policy=policy,
                           buckets=buckets, mesh=mesh, autotune=autotune,
-                          tuning_path=tuning_path)
+                          tuning_path=tuning_path, tracer=tracer,
+                          registry=registry)
     engine.warmup()
     rng = np.random.default_rng(seed)
     max_n = engine.batcher.policy.max_width
@@ -531,6 +705,8 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
         engine.submit(rng.standard_normal((int(n), 3, img, img))
                       .astype(np.float32), deadline_s=dl)
     engine.run()                            # flush everything in flight
+    if registry is not None:
+        engine.snapshot_registry(registry)
     d = engine.metrics_dict()
     d["workload"] = {"model": model, "width_mult": width_mult, "img": img,
                      "requests": int(requests), "policy": policy,
@@ -558,4 +734,5 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
         print(f"buckets compiled {c['buckets']}, "
               f"{c['distinct_schedules']} distinct schedules, "
               f"schedule-cache hit_rate={c['hit_rate']}")
+        print(engine.folds.table())
     return d

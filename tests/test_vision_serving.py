@@ -173,7 +173,9 @@ def test_slot_refill_under_mixed_sizes(vgg_params):
     # (4)->4, (2+1)->4
     assert m.batches == 4
     assert m.per_bucket == {4: 3, 1: 1}
-    assert m.occupancies == pytest.approx([1.0, 1.0, 1.0, 0.75])
+    # occupancies stream into a bounded histogram (obs/metrics.py):
+    # exact count/mean survive, the raw list does not
+    assert m.occupancy_hist.count == 4
     assert m.slot_occupancy == pytest.approx(0.9375)
 
 
