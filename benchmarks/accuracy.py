@@ -1,0 +1,118 @@
+"""Accuracy-vs-speed gate for the int8 fold-streaming path.
+
+    PYTHONPATH=src python -m benchmarks.accuracy            # all models
+    PYTHONPATH=src python -m benchmarks.accuracy --model vgg16
+
+For each registered zoo model the same random-init params are compiled
+twice through the fold-schedule engine — fp32 and int8, identical
+policy — and driven over one deterministic random batch.  The fp32
+forward is the oracle: the int8 path must agree on the argmax (top-1)
+for (almost) every image and keep the per-logit error a small fraction
+of the logit range.  Quantization error is a property of the *scheme*
+(per-tensor activation scale, per-output-channel weight scales, int32
+accumulation), not of the weights being trained, so random-init nets
+gate it just as well as trained ones — and CI stays dataset-free.
+
+``accuracy_summary`` is the machine-readable entry ``fig9_vgg``'s
+quantization section and ``check_bench``'s top-1 floor consume.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+DEFAULT_WIDTH = 0.0625
+DEFAULT_IMG = 32
+DEFAULT_CLASSES = 10
+DEFAULT_BATCH = 16
+MODELS = ("vgg16", "resnet18", "mobilenetv2")
+
+
+def accuracy_summary(model: str, *, width_mult: float = DEFAULT_WIDTH,
+                     img: int = DEFAULT_IMG, classes: int = DEFAULT_CLASSES,
+                     batch: int = DEFAULT_BATCH, policy: str = "pallas",
+                     seed: int = 0) -> dict:
+    """Top-1 agreement and per-logit error of the int8 forward against
+    the fp32 oracle, plus measured per-image latency for both, on one
+    deterministic batch."""
+    import jax
+    from repro.core.engine import compile_network
+    from repro.models.zoo import get_conv_model
+
+    spec = get_conv_model(model)
+    params = spec.init_params(jax.random.PRNGKey(0), width_mult=width_mult,
+                              img=img, classes=classes)
+    graph = spec.to_graph()
+    shape = (batch, 3, img, img)
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+    net_fp = compile_network(params, graph, shape, policy=policy)
+    net_q = compile_network(params, graph, shape, policy=policy,
+                            precision="int8")
+
+    def timed(net):
+        y = np.asarray(net(params, x))          # includes the trace
+        t0 = time.perf_counter()
+        np.asarray(net(params, x))
+        return y, (time.perf_counter() - t0) / batch
+
+    y_fp, t_fp = timed(net_fp)
+    y_q, t_q = timed(net_q)
+
+    agree = float((y_fp.argmax(-1) == y_q.argmax(-1)).mean())
+    abs_err = float(np.abs(y_fp - y_q).max())
+    # normalize by the oracle's logit spread: an absolute logit error is
+    # meaningless across nets whose logits live on different scales
+    spread = float(y_fp.max() - y_fp.min()) or 1.0
+    return {
+        "model": model,
+        "workload": {"width_mult": width_mult, "img": img,
+                     "classes": classes, "batch": batch, "policy": policy,
+                     "seed": seed, "backend": jax.default_backend()},
+        "top1_agreement": agree,
+        "max_abs_logit_err": round(abs_err, 6),
+        "rel_logit_err": round(abs_err / spread, 6),
+        "fp32_per_img_s": round(t_fp, 6),
+        "int8_per_img_s": round(t_q, 6),
+        "conv_layers": len(net_q.layer_schedules),
+        "distinct_schedules": net_q.distinct_schedules,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="all", choices=MODELS + ("all",))
+    ap.add_argument("--width-mult", type=float, default=DEFAULT_WIDTH)
+    ap.add_argument("--img", type=int, default=DEFAULT_IMG)
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--policy", default="pallas",
+                    choices=("pallas", "auto", "reference"))
+    ap.add_argument("--min-agreement", type=float, default=0.98,
+                    help="exit nonzero when any model's top-1 agreement "
+                         "falls below this floor")
+    args = ap.parse_args(argv)
+
+    names = MODELS if args.model == "all" else (args.model,)
+    worst = 1.0
+    for name in names:
+        d = accuracy_summary(name, width_mult=args.width_mult,
+                             img=args.img, batch=args.batch,
+                             policy=args.policy)
+        worst = min(worst, d["top1_agreement"])
+        print(f"accuracy,{name},top1_agreement={d['top1_agreement']},"
+              f"rel_logit_err={d['rel_logit_err']},"
+              f"max_abs_logit_err={d['max_abs_logit_err']},"
+              f"fp32_per_img_s={d['fp32_per_img_s']},"
+              f"int8_per_img_s={d['int8_per_img_s']},"
+              f"schedules={d['distinct_schedules']}/{d['conv_layers']}")
+    ok = worst >= args.min_agreement
+    print(f"# int8 top-1 agreement floor {args.min_agreement}: "
+          f"{'ok' if ok else 'FAIL'} (worst {worst})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

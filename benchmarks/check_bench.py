@@ -31,6 +31,14 @@ Three metric classes, three disciplines:
   measured — so it transfers across machines and gates as an absolute
   floor: a drop means the planner started picking schedules that map the
   loop nest onto the array worse than before.
+* **quantization** — the int8 fold-streaming gate, per model: the int8
+  lowering's fused ``pallas_calls`` and ``distinct_schedules`` gate in
+  **exact** (same structural discipline as fp32), while the modeled
+  weight+activation stream-byte reduction (``stream_bytes_ratio``) and
+  the top-1 agreement against the fp32 oracle gate as absolute floors —
+  both are deterministic (analytic bytes; fixed seed, fixed scheme), so
+  any drop means the quantized path got leakier or less faithful, never
+  machine noise.
 
 A fresh metric with no baseline entry fails the gate too (it means the
 baseline predates the metric — re-baseline deliberately, not silently).
@@ -66,7 +74,7 @@ def extract(bench: dict) -> dict:
     baseline file stores exactly this distillation (stable under bench
     sections the gate doesn't police)."""
     out = {"exact": {}, "latency": {}, "throughput": {}, "robustness": {},
-           "observability": {}}
+           "observability": {}, "quantization": {}}
 
     def model_section(name: str, sec: dict) -> None:
         fr = sec.get("fold_reuse", {})
@@ -105,6 +113,13 @@ def extract(bench: dict) -> dict:
         if util is not None:
             out["observability"][f"serving.{m}.util_model_pct"] = \
                 float(util)
+    for m, sec in (bench.get("quantization") or {}).items():
+        for k in ("pallas_calls", "distinct_schedules", "conv_layers"):
+            if k in sec:
+                out["exact"][f"quant.{m}.{k}"] = int(sec[k])
+        for k in ("stream_bytes_ratio", "top1_agreement"):
+            if k in sec:
+                out["quantization"][f"quant.{m}.{k}"] = float(sec[k])
     return out
 
 
@@ -118,7 +133,8 @@ def validate_baseline(baseline) -> list:
         return [f"baseline must be a JSON object, got "
                 f"{type(baseline).__name__}"]
     known = {"exact": int, "latency": float, "throughput": float,
-             "robustness": float, "observability": float}
+             "robustness": float, "observability": float,
+             "quantization": float}
     for section, want in known.items():
         sec = baseline.get(section)
         if sec is None:
@@ -148,7 +164,7 @@ def validate_baseline(baseline) -> list:
     for section in sorted(set(baseline) - set(known)):
         problems.append(f"unknown section {section!r} (want exact / "
                         f"latency / throughput / robustness / "
-                        f"observability)")
+                        f"observability / quantization)")
     return problems
 
 
@@ -203,10 +219,23 @@ def compare(fresh: dict, baseline: dict, tol: float) -> list:
                           f"{got:.2f}% vs baseline floor {base:.2f}% — "
                           "the planner picked schedules that utilize the "
                           "PE array worse than baseline"))
+    # quantization floors are deterministic (analytic stream bytes; a
+    # fixed-seed, fixed-scheme agreement check), so a drop is always a
+    # real regression of the int8 path, never machine noise
+    for metric, base in sorted(baseline.get("quantization", {}).items()):
+        got = fresh["quantization"].get(metric)
+        if got is None:
+            fails.append(("quantization", metric,
+                          "missing from fresh bench"))
+        elif got < base:
+            fails.append(("quantization", metric,
+                          f"{got:.4f} vs baseline floor {base:.4f} — the "
+                          "int8 path moves more bytes or agrees less "
+                          "with the fp32 oracle than baseline"))
     # a metric the baseline has never seen means the baseline rotted —
     # every class, or a new model's metrics would be silently ungated
     for kind in ("exact", "latency", "throughput", "robustness",
-                 "observability"):
+                 "observability", "quantization"):
         for metric in sorted(fresh[kind]):
             if metric not in baseline.get(kind, {}):
                 fails.append((kind, metric,
@@ -255,7 +284,7 @@ def main(argv=None) -> int:
     fails = compare(fresh, baseline, args.latency_tolerance)
     n_checked = sum(len(baseline[k]) for k in
                     ("exact", "latency", "throughput", "robustness",
-                     "observability"))
+                     "observability", "quantization"))
     if fails:
         print(f"PERF GATE: {len(fails)}/{n_checked} checks failed "
               f"(tolerance {args.latency_tolerance * 100:.0f}%):",

@@ -328,17 +328,88 @@ def bench_summary(width: float = 0.0625, img: int = 32, batch: int = 2
 
     out = model_micro("vgg16", width=width, img=img, batch=batch)
     bytes_psum = bytes_ws = bytes_os = 0
+    by_precision = {"fp32": 0, "int8": 0}
     for _, cv in vgg16_conv_layers():
         tm = dataflow_traffic(cv)
         bytes_psum += tm["weight_stationary_psum"]
         bytes_ws += tm["weight_stationary"]
         bytes_os += tm["output_stationary"]
+        for prec in by_precision:
+            by_precision[prec] += dataflow_traffic(
+                cv, precision=prec)["weight_stationary"]
     out["bytes_moved_model_fullsize"] = {
         "ws_psum_pr1": bytes_psum,
         "ws_inkernel": bytes_ws,
         "os": bytes_os,
+        # > 1 by construction: the psum formulation stages every depth
+        # fold's partial in HBM (write + read back) where the in-kernel
+        # reduction keeps it in VMEM — even at g_c == 1 the final output
+        # makes one extra round trip
         "ws_psum_over_inkernel": round(bytes_psum / bytes_ws, 3),
+        # the same 13-layer walk priced at each streamed dtype (weights
+        # and activations at 1 byte for int8; outputs at fp32 width)
+        "ws_inkernel_by_precision": dict(by_precision),
     }
+    return out
+
+
+def _stream_bytes(net) -> float:
+    """Modeled weight + activation HBM stream bytes for one compiled
+    network, at each schedule's streamed dtype (outputs excluded — they
+    leave the kernel at fp32 in both precisions)."""
+    from repro.core.engine import traffic_components
+    total = 0.0
+    for _, s in net.layer_schedules:
+        comp = traffic_components(s.nest, s.plan, s.dataflow,
+                                  precision=s.key.precision)
+        total += comp["weights"] + comp["input"]
+    return total
+
+
+def quantization_summary(width: float = 0.0625, img: int = 32,
+                         batch: int = 2, classes: int = 10) -> dict:
+    """The per-model int8 section of the bench JSON: fused pallas_call
+    count and distinct schedules of the int8 lowering (structural, gated
+    exactly), the modeled weight+activation stream-byte reduction vs the
+    fp32 lowering of the same net, and the accuracy-vs-speed numbers
+    from ``benchmarks/accuracy.py``."""
+    import jax
+    from benchmarks.accuracy import accuracy_summary
+    from repro.core.engine import compile_network
+    from repro.models.zoo import get_conv_model
+
+    out = {}
+    for model in ("vgg16", "resnet18", "mobilenetv2"):
+        spec = get_conv_model(model)
+        params = spec.init_params(jax.random.PRNGKey(0), width_mult=width,
+                                  img=img, classes=classes)
+
+        def compiled(precision):
+            return compile_network(params, spec.to_graph(),
+                                   (batch, 3, img, img), policy="pallas",
+                                   jit=False, precision=precision)
+
+        net_fp, net_q = compiled("fp32"), compiled("int8")
+        b_fp, b_q = _stream_bytes(net_fp), _stream_bytes(net_q)
+        acc = accuracy_summary(model, width_mult=width, img=img)
+        out[model] = {
+            "pallas_calls": count_pallas_calls(net_q, params, img, batch),
+            "conv_layers": len(net_q.layer_schedules),
+            "distinct_schedules": net_q.distinct_schedules,
+            "stream_bytes_fp32": b_fp,
+            "stream_bytes_int8": b_q,
+            "stream_bytes_ratio": round(b_fp / b_q, 3),
+            "top1_agreement": acc["top1_agreement"],
+            "rel_logit_err": acc["rel_logit_err"],
+            "fp32_per_img_s": acc["fp32_per_img_s"],
+            "int8_per_img_s": acc["int8_per_img_s"],
+        }
+        q = out[model]
+        print(f"quantization,{model},pallas_calls={q['pallas_calls']},"
+              f"schedules={q['distinct_schedules']}/{q['conv_layers']},"
+              f"stream_bytes_ratio={q['stream_bytes_ratio']}x,"
+              f"top1_agreement={q['top1_agreement']},"
+              f"rel_logit_err={q['rel_logit_err']}")
     return out
 
 
@@ -362,6 +433,7 @@ def main(csv=False):
     measured_tuned()
     model_micro("resnet18")      # the other registered models — the same
     model_micro("mobilenetv2")   # lowering covers dense, residual, grouped
+    quantization_summary()       # int8 streaming vs the fp32 oracle
     return u64_min
 
 

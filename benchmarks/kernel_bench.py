@@ -41,13 +41,17 @@ def traffic_model(cv: ConvLoopNest, bytes_per_elem: int = 4):
 
 
 def dataflow_traffic(cv: ConvLoopNest, plan=None,
-                     bytes_per_elem: int = 4) -> dict:
+                     bytes_per_elem: int = 4,
+                     precision: str = "fp32") -> dict:
     """Modeled HBM bytes per dataflow formulation — delegates to the
     engine's single source of truth so the benchmark can never diverge
-    from the model the engine actually ranks with."""
+    from the model the engine actually ranks with.  ``precision`` prices
+    the weight/activation streams at the streamed dtype (1 byte for
+    int8); psum staging and outputs stay at accumulator width."""
     from repro.core.engine import dataflow_traffic_bytes
     plan = plan or plan_conv_blocks(cv)
-    return dataflow_traffic_bytes(cv, plan, bytes_per_elem)
+    return dataflow_traffic_bytes(cv, plan, bytes_per_elem,
+                                  precision=precision)
 
 
 def epilogue_traffic(cv: ConvLoopNest, pooled: bool = False,

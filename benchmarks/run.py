@@ -50,6 +50,7 @@ def micro_summary(serving: bool = True) -> dict:
     summary = fig9_vgg.bench_summary()
     summary["resnet18"] = fig9_vgg.model_micro("resnet18")
     summary["mobilenetv2"] = fig9_vgg.model_micro("mobilenetv2")
+    summary["quantization"] = fig9_vgg.quantization_summary()
     if serving:
         from repro.serve.vision import serving_summary
         summary["serving"] = serving_summary("vgg16", requests=16)

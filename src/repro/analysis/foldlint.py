@@ -84,8 +84,14 @@ def _check_layers(net, params, input_shape: Tuple[int, ...],
             epi = nd.epilogue
             if epi is not None and epi.pool and (cv.p < 2 or cv.q < 2):
                 epi = dataclasses.replace(epi, pool=None)
+            if sched.key.precision == "int8":
+                # the kernel sees the requantized epilogue: bias folded
+                # into the dequant shift, scale always on
+                from repro.core.quant import requant_epilogue
+                epi = requant_epilogue(epi)
             plan = sched.plan.clamped(cv.nf, cv.c, cv.p)
-            layer_rep = check_plan(cv, plan, where=where)
+            layer_rep = check_plan(cv, plan, where=where,
+                                   precision=sched.key.precision)
             if layer_rep.ok:
                 try:
                     spec = fold_kernel_spec(
@@ -127,7 +133,8 @@ def lint_model(name: str, *, img: int = DEFAULT_IMG,
                width_mult: float = DEFAULT_WIDTH,
                classes: int = DEFAULT_CLASSES,
                batch: int = DEFAULT_BATCH,
-               policy: str = "pallas") -> dict:
+               policy: str = "pallas",
+               precision: str = "fp32") -> dict:
     """Run the full verifier stack over one zoo model; returns a
     machine-readable summary dict (``report`` holds the findings)."""
     from repro.models import zoo
@@ -140,6 +147,7 @@ def lint_model(name: str, *, img: int = DEFAULT_IMG,
     rep = Report()
     rep.extend(lint_graph(original, params, input_shape))
     summary = {"model": name, "input_shape": list(input_shape),
+               "precision": precision,
                "conv_layers": 0, "pallas_calls": 0, "audited": False}
     if rep.errors:
         # a structurally broken graph cannot be compiled, let alone audited
@@ -148,7 +156,8 @@ def lint_model(name: str, *, img: int = DEFAULT_IMG,
         return summary
 
     net = zoo.compile_forward(name, params, img=img, batch=batch,
-                              policy=policy, jit=False, verify=False)
+                              policy=policy, jit=False, verify=False,
+                              precision=precision)
     if net.fused:
         rep.extend(check_fusion(original, net.graph))
     summary["conv_layers"] = _check_layers(net, params, input_shape, rep)
@@ -178,6 +187,10 @@ def main(argv: Optional[list] = None) -> int:
                     choices=("pallas", "auto", "reference"),
                     help="execution policy to compile under "
                          "(default: pallas)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=("fp32", "int8"),
+                    help="streaming precision to compile under "
+                         "(default: fp32)")
     ap.add_argument("--json", action="store_true",
                     help="emit one JSON object per model on stdout")
     args = ap.parse_args(argv)
@@ -188,7 +201,7 @@ def main(argv: Optional[list] = None) -> int:
         summary = lint_model(name, img=args.img,
                              width_mult=args.width_mult,
                              classes=args.classes, batch=args.batch,
-                             policy=args.policy)
+                             policy=args.policy, precision=args.precision)
         failed |= not summary["ok"]
         if args.json:
             print(json.dumps(summary, sort_keys=True))

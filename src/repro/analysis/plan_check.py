@@ -25,6 +25,9 @@ reaches a kernel:
   plan.vmem-overflow    ``conv_working_set`` exceeds the VMEM limit
   plan.vmem-pressure    (warning) working set exceeds the planner's
                         half-capacity target, eating the double-buffer
+  quant.acc-overflow    (int8 only) the worst-case per-output reduction
+                        127 * 127 * C_g * R * S exceeds the int32
+                        accumulator range — a depth fold could wrap
 """
 from __future__ import annotations
 
@@ -47,9 +50,26 @@ def _covers_exactly(grid: int, block: int, extent: int) -> bool:
 
 def check_plan(conv: ConvLoopNest, plan: ConvBlockPlan,
                vmem_limit: int = DEFAULT_VMEM_LIMIT,
-               where: str = "plan") -> Report:
-    """Prove ``plan`` is a legal fold geometry for ``conv``."""
+               where: str = "plan", precision: str = "fp32") -> Report:
+    """Prove ``plan`` is a legal fold geometry for ``conv``.
+
+    With ``precision="int8"`` the int32 accumulator is additionally
+    proven safe: the per-output reduction depth (C_g * R * S) at the
+    worst-case int8 magnitude (127 * 127 per product) must fit int32.
+    The VMEM check below is unchanged — it assumes 4-byte elements,
+    which is exact for the int32 accumulator and conservative for the
+    int8 operand folds.
+    """
     rep = Report()
+    if precision == "int8":
+        from repro.core.quant import INT32_ACC_MAX, int32_accumulator_bound
+        bound = int32_accumulator_bound(conv.cg, conv.r, conv.s)
+        if bound > INT32_ACC_MAX:
+            rep.add("quant.acc-overflow", where,
+                    f"worst-case int8 reduction 127^2 * C_g*R*S = "
+                    f"127^2 * {conv.cg * conv.r * conv.s} = {bound} "
+                    f"exceeds int32 max {INT32_ACC_MAX}: a depth fold "
+                    f"could wrap the accumulator")
     nf_b, c_b, p_b = plan.nf_block, plan.c_block, plan.p_block
     g_nf, g_c, g_p = plan.grid
 

@@ -98,15 +98,22 @@ class ScheduleKey:
     groups: int = 1      # channel groups (depthwise = groups == c == nf);
     #                      part of the filter-fold identity: the same
     #                      (nf, c, r, s) tensor folds differently per group
+    precision: str = "fp32"   # streamed dtype ("fp32" | "int8"): an int8
+    #                           filter fold is a different resident tensor
+    #                           (1 byte/elem, int32 accumulator), so it is
+    #                           a different schedule identity
 
     @classmethod
-    def from_loopnest(cls, cv: ConvLoopNest) -> "ScheduleKey":
+    def from_loopnest(cls, cv: ConvLoopNest,
+                      precision: str = "fp32") -> "ScheduleKey":
         return cls(nf=cv.nf, c=cv.c, r=cv.r, s=cv.s,
-                   stride=cv.stride, dilation=cv.dilation, groups=cv.groups)
+                   stride=cv.stride, dilation=cv.dilation, groups=cv.groups,
+                   precision=precision)
 
     def __str__(self) -> str:
         g = f"/g{self.groups}" if self.groups > 1 else ""
-        return f"{self.r}x{self.s}x{self.c}->{self.nf}/s{self.stride}{g}"
+        pr = f"/{self.precision}" if self.precision != "fp32" else ""
+        return f"{self.r}x{self.s}x{self.c}->{self.nf}/s{self.stride}{g}{pr}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,8 +153,64 @@ class ConvSchedule:
 # Dataflow selection from perfmodel cost estimates
 # --------------------------------------------------------------------------
 
+def stream_bytes_per_elem(precision: str, bytes_per_elem: int = 4) -> int:
+    """Bytes per *streamed* weight/activation element at a precision.
+    Outputs (and the accumulator) stay at ``bytes_per_elem`` — the int8
+    path dequantizes at flush time and writes fp32."""
+    if precision == "int8":
+        return 1
+    if precision == "fp32":
+        return bytes_per_elem
+    raise ValueError(f"unknown precision {precision!r} (want fp32|int8)")
+
+
+def traffic_components(cv: ConvLoopNest, plan: ConvBlockPlan, dataflow: str,
+                       bytes_per_elem: int = 4,
+                       precision: str = "fp32") -> Dict[str, float]:
+    """Per-tensor-class HBM byte split for one dataflow formulation —
+    weights and input at the *streamed* dtype, output at the accumulate/
+    write dtype.  ``dataflow_traffic_bytes`` sums these; benchmarks
+    report them so per-dtype totals are visible (the int8 win is on the
+    weight/input streams only)."""
+    bpe = bytes_per_elem
+    sbpe = stream_bytes_per_elem(precision, bytes_per_elem)
+    sizes = cv.tensor_sizes()
+    w_bytes = sizes["filter"] * sbpe
+    in_bytes = cv.n * cv.c * cv.padded_x * cv.padded_y * sbpe
+    out_bytes = sizes["output"] * bpe
+    clamped = plan.clamped(cv.nf, cv.c, cv.p)
+    g_nf, g_c, g_p = clamped.grid
+    if cv.depthwise:
+        if dataflow != "depthwise":
+            raise ValueError(f"depthwise nest has no {dataflow!r} "
+                             "formulation")
+        return {"weights": w_bytes, "input": in_bytes, "output": out_bytes}
+    g_nfg = max(g_nf // cv.groups, 1)       # nf folds per group
+    # psum staging: every depth fold's partial-sum tensor is written to
+    # HBM and read back by the XLA reduce, then the final output is
+    # written — (2*g_c + 1) output-sized transfers.  This holds at
+    # g_c == 1 too (the partial tensor still round-trips), which is what
+    # lets the model distinguish psum staging from the in-kernel
+    # accumulator even for single-depth-fold layers.  Partial sums are
+    # always accumulator-width (fp32/int32), never int8.
+    psum = (2 * g_c + 1) * out_bytes
+    acc_bytes = clamped.nf_block * g_p * clamped.p_block * cv.q * bpe
+    ws_out = out_bytes if acc_bytes <= WS_ACC_BYTES_LIMIT else psum
+    if dataflow == "weight_stationary":
+        return {"weights": w_bytes, "input": g_nfg * in_bytes,
+                "output": ws_out}
+    if dataflow == "weight_stationary_psum":
+        return {"weights": w_bytes, "input": g_nfg * in_bytes,
+                "output": psum}
+    if dataflow == "output_stationary":
+        return {"weights": g_p * w_bytes, "input": g_nfg * in_bytes,
+                "output": out_bytes}
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
 def dataflow_traffic_bytes(cv: ConvLoopNest, plan: ConvBlockPlan,
-                           bytes_per_elem: int = 4) -> Dict[str, float]:
+                           bytes_per_elem: int = 4,
+                           precision: str = "fp32") -> Dict[str, float]:
     """Modeled HBM bytes per dataflow formulation — the single source of
     truth shared by ``dataflow_costs`` and ``benchmarks/kernel_bench``.
 
@@ -163,29 +226,22 @@ def dataflow_traffic_bytes(cv: ConvLoopNest, plan: ConvBlockPlan,
     *per-group* nf-fold count, not the global one.  A depthwise nest has
     a single ``"depthwise"`` entry — every tensor is touched exactly once
     (no depth folds to re-stream anything for).
+
+    ``precision="int8"`` prices the weight/activation streams at one byte
+    per element (``traffic_components``); outputs and staged partial sums
+    stay accumulator-width.
     """
-    bpe = bytes_per_elem
-    sizes = cv.tensor_sizes()
-    w_bytes = sizes["filter"] * bpe
-    in_bytes = cv.n * cv.c * cv.padded_x * cv.padded_y * bpe
-    out_bytes = sizes["output"] * bpe
-    clamped = plan.clamped(cv.nf, cv.c, cv.p)
-    g_nf, g_c, g_p = clamped.grid
-    if cv.depthwise:
-        return {"depthwise": w_bytes + in_bytes + out_bytes}
-    g_nfg = max(g_nf // cv.groups, 1)       # nf folds per group
-    psum = out_bytes if g_c == 1 else 2 * g_c * out_bytes
-    acc_bytes = clamped.nf_block * g_p * clamped.p_block * cv.q * bpe
-    ws_out = out_bytes if acc_bytes <= WS_ACC_BYTES_LIMIT else psum
-    return {
-        "weight_stationary": w_bytes + g_nfg * in_bytes + ws_out,
-        "weight_stationary_psum": w_bytes + g_nfg * in_bytes + psum,
-        "output_stationary": g_p * w_bytes + g_nfg * in_bytes + out_bytes,
-    }
+    dws = (("depthwise",) if cv.depthwise else
+           ("weight_stationary", "weight_stationary_psum",
+            "output_stationary"))
+    return {df: sum(traffic_components(cv, plan, df, bytes_per_elem,
+                                       precision).values())
+            for df in dws}
 
 
 def dataflow_costs(cv: ConvLoopNest, plan: ConvBlockPlan,
-                   cfg: Optional[MavecConfig] = None) -> Dict[str, float]:
+                   cfg: Optional[MavecConfig] = None,
+                   precision: str = "fp32") -> Dict[str, float]:
     """Estimated execution cycles of each dataflow for this layer.
 
     Both dataflows reduce depth folds in-kernel (PR 2) and do the same
@@ -227,7 +283,7 @@ def dataflow_costs(cv: ConvLoopNest, plan: ConvBlockPlan,
     cycle counts.
     """
     cfg = cfg or MavecConfig()
-    traffic = dataflow_traffic_bytes(cv, plan, cfg.bytes_per_elem)
+    traffic = dataflow_traffic_bytes(cv, plan, cfg.bytes_per_elem, precision)
 
     def cycles(traffic_bytes: float) -> float:
         return traffic_bytes / (cfg.offchip_gbps * 1e9) * (cfg.freq_ghz * 1e9)
@@ -245,25 +301,28 @@ def dataflow_costs(cv: ConvLoopNest, plan: ConvBlockPlan,
 
 def select_dataflow(cv: ConvLoopNest, plan: ConvBlockPlan,
                     cfg: Optional[MavecConfig] = None,
-                    costs: Optional[Dict[str, float]] = None) -> str:
+                    costs: Optional[Dict[str, float]] = None,
+                    precision: str = "fp32") -> str:
     """Pick the cheaper dataflow; ties go to ``output_stationary`` (its
     single output write avoids the host-side partial-sum reduce).
     Depthwise nests have exactly one dataflow — the dedicated kernel with
     no depth-fold reduction."""
     if cv.depthwise:
         return "depthwise"
-    costs = costs if costs is not None else dataflow_costs(cv, plan, cfg)
+    costs = (costs if costs is not None
+             else dataflow_costs(cv, plan, cfg, precision))
     if costs["output_stationary"] <= costs["weight_stationary"]:
         return "output_stationary"
     return "weight_stationary"
 
 
 def plan_and_dataflow(cv: ConvLoopNest,
-                      cfg: Optional[MavecConfig] = None
+                      cfg: Optional[MavecConfig] = None,
+                      precision: str = "fp32"
                       ) -> Tuple[ConvBlockPlan, str]:
     """Uncached one-shot planning (the ``impl="fold_auto"`` path)."""
     plan = plan_conv_blocks(cv)
-    return plan, select_dataflow(cv, plan, cfg)
+    return plan, select_dataflow(cv, plan, cfg, precision=precision)
 
 
 # --------------------------------------------------------------------------
@@ -353,7 +412,8 @@ def tuning_candidates(cv: ConvLoopNest,
 def measure_schedule_ms(cv: ConvLoopNest, plan: ConvBlockPlan, dataflow: str,
                         *, interpret: Optional[bool] = None,
                         reps: int = 3, warmup: int = 1,
-                        epilogue: Optional[Epilogue] = None) -> float:
+                        epilogue: Optional[Epilogue] = None,
+                        precision: str = "fp32") -> float:
     """Median-of-``reps`` wall time (ms) of one fold-kernel run on-device.
 
     Synthesizes the layer's tensors — including a shortcut tensor when the
@@ -362,7 +422,10 @@ def measure_schedule_ms(cv: ConvLoopNest, plan: ConvBlockPlan, dataflow: str,
     the timed kernel — including its pool-driven even-P-block
     normalization and the resident shortcut's VMEM footprint — is the one
     that will actually execute), runs ``warmup`` throwaway calls, then
-    times ``reps`` calls with ``block_until_ready``.
+    times ``reps`` calls with ``block_until_ready``.  With
+    ``precision="int8"`` the operands are synthesized *quantized* and the
+    epilogue is the requant form, so the race times the int8 stream it
+    will deploy.
     """
     from repro.kernels.conv2d_ws import conv2d_folded
     if interpret is None:
@@ -371,12 +434,30 @@ def measure_schedule_ms(cv: ConvLoopNest, plan: ConvBlockPlan, dataflow: str,
     x = jax.random.normal(
         kx, (cv.n, cv.c, cv.padded_x, cv.padded_y), jnp.float32)
     w = jax.random.normal(kw, (cv.nf, cv.cg, cv.r, cv.s), jnp.float32)
-    bias = (jnp.zeros((cv.nf,), jnp.float32)
-            if epilogue is not None and epilogue.bias else None)
-    scale = shift = None
-    if epilogue is not None and epilogue.scale:
-        scale = jnp.ones((cv.nf,), jnp.float32)
-        shift = jnp.zeros((cv.nf,), jnp.float32)
+    if precision == "int8":
+        from repro.core.quant import (act_scale, quantize_act,
+                                      quantize_weight, requant_affine,
+                                      requant_epilogue)
+        x = quantize_act(x, act_scale(x))
+        w, w_scale = quantize_weight(w)
+        has_epi = epilogue is not None
+        scale, shift = requant_affine(
+            w_scale, epilogue,
+            jnp.zeros((cv.nf,), jnp.float32)
+            if has_epi and epilogue.bias else None,
+            jnp.ones((cv.nf,), jnp.float32)
+            if has_epi and epilogue.scale else None,
+            jnp.zeros((cv.nf,), jnp.float32)
+            if has_epi and epilogue.scale else None)
+        epilogue = requant_epilogue(epilogue)
+        bias = None
+    else:
+        bias = (jnp.zeros((cv.nf,), jnp.float32)
+                if epilogue is not None and epilogue.bias else None)
+        scale = shift = None
+        if epilogue is not None and epilogue.scale:
+            scale = jnp.ones((cv.nf,), jnp.float32)
+            shift = jnp.zeros((cv.nf,), jnp.float32)
     residual = (jax.random.normal(kr, (cv.n, cv.nf, cv.p, cv.q), jnp.float32)
                 if epilogue is not None and epilogue.residual else None)
     fn = jax.jit(functools.partial(conv2d_folded, stride=cv.stride,
@@ -401,7 +482,8 @@ def autotune_schedule(cv: ConvLoopNest, cfg: Optional[MavecConfig] = None,
                       reps: int = 3, warmup: int = 1,
                       epilogue: Optional[Epilogue] = None,
                       timer: Optional[Callable[[ConvBlockPlan, str], float]]
-                      = None) -> ConvSchedule:
+                      = None,
+                      precision: str = "fp32") -> ConvSchedule:
     """Race the candidate set on-device and return the measured winner.
 
     Candidates are ranked strictly by their measured median — a
@@ -412,11 +494,11 @@ def autotune_schedule(cv: ConvLoopNest, cfg: Optional[MavecConfig] = None,
     the executed ones.  ``timer`` overrides the measurement (tests inject
     deterministic fakes).
     """
-    key = ScheduleKey.from_loopnest(cv)
+    key = ScheduleKey.from_loopnest(cv, precision)
     if timer is None:
         timer = lambda plan, df: measure_schedule_ms(  # noqa: E731
             cv, plan, df, interpret=interpret, reps=reps, warmup=warmup,
-            epilogue=epilogue)
+            epilogue=epilogue, precision=precision)
     raced = []
     failed = []
     for label, plan, df in tuning_candidates(cv, vmem_limit=vmem_limit):
@@ -431,7 +513,7 @@ def autotune_schedule(cv: ConvLoopNest, cfg: Optional[MavecConfig] = None,
             + "; ".join(f"{lbl}: {e}" for lbl, e in failed))
     raced.sort(key=lambda t: t[0])         # measured-fastest first, always
     best_ms, _, best_plan, best_df = raced[0]
-    costs = dataflow_costs(cv, best_plan, cfg)
+    costs = dataflow_costs(cv, best_plan, cfg, precision)
     return ConvSchedule(key=key, nest=cv, plan=best_plan, dataflow=best_df,
                         costs=tuple(sorted(costs.items())),
                         source="measured", measured_ms=best_ms,
@@ -527,13 +609,14 @@ class ScheduleCache:
 
     def _build(self, cv: ConvLoopNest, key: ScheduleKey) -> ConvSchedule:
         plan = plan_conv_blocks(cv, vmem_limit=self.vmem_limit)
-        costs = dataflow_costs(cv, plan, self.cfg)
+        costs = dataflow_costs(cv, plan, self.cfg, key.precision)
         dataflow = select_dataflow(cv, plan, self.cfg, costs=costs)
         return ConvSchedule(key=key, nest=cv, plan=plan, dataflow=dataflow,
                             costs=tuple(sorted(costs.items())))
 
-    def schedule_for(self, cv: ConvLoopNest) -> ConvSchedule:
-        key = ScheduleKey.from_loopnest(cv)
+    def schedule_for(self, cv: ConvLoopNest,
+                     precision: str = "fp32") -> ConvSchedule:
+        key = ScheduleKey.from_loopnest(cv, precision)
         hit = self._entries.get(key)
         if hit is not None:
             if (cv.padded_x > hit.nest.padded_x
@@ -557,7 +640,7 @@ class ScheduleCache:
                      warmup: int = 1, interpret: Optional[bool] = None,
                      epilogue: Optional[Epilogue] = None,
                      timer: Optional[Callable[[ConvBlockPlan, str], float]]
-                     = None) -> ConvSchedule:
+                     = None, precision: str = "fp32") -> ConvSchedule:
         """Measured ``schedule_for``: the first layer with a given key
         races ``tuning_candidates`` on-device; every later layer (and every
         later session that loads the JSON tuning cache) reuses the winner —
@@ -568,7 +651,7 @@ class ScheduleCache:
         different fused epilogue (e.g. a pre-pool trunk layer) reuses the
         winner's block geometry without re-measuring — the epilogue only
         changes the flush, not the fold geometry the race ranks."""
-        key = ScheduleKey.from_loopnest(cv)
+        key = ScheduleKey.from_loopnest(cv, precision)
         hit = self._entries.get(key)
         if (hit is not None and hit.tuned
                 and cv.padded_x <= hit.nest.padded_x
@@ -582,7 +665,7 @@ class ScheduleCache:
         sched = autotune_schedule(cv, self.cfg, vmem_limit=self.vmem_limit,
                                   interpret=interpret, reps=reps,
                                   warmup=warmup, epilogue=epilogue,
-                                  timer=timer)
+                                  timer=timer, precision=precision)
         self._entries[key] = sched
         self._kernels = {k: v for k, v in self._kernels.items()
                          if k[0] != key}
@@ -631,8 +714,10 @@ class ScheduleCache:
 
         Tuning JSON is schema-tolerant in both directions: entries written
         before the ``groups`` axis existed load with ``groups=1`` (the
-        dense geometry they were measured on), and unknown extra fields
-        from a newer writer are ignored rather than treated as rot.
+        dense geometry they were measured on), a pre-int8 cache loads
+        with ``precision="fp32"`` (all it could have measured), and
+        unknown extra fields from a newer writer are ignored rather than
+        treated as rot.
 
         Timings only transfer within a backend: a cache recorded on a
         different backend is ignored (returns 0, with a warning) so stale
@@ -686,7 +771,7 @@ class ScheduleCache:
                 warnings.warn(f"tuning cache {path!r}: skipping corrupt "
                               f"entry ({type(err).__name__}: {err})")
                 continue
-            costs = dataflow_costs(nest, plan, self.cfg)
+            costs = dataflow_costs(nest, plan, self.cfg, key.precision)
             self._entries[key] = ConvSchedule(
                 key=key, nest=nest, plan=plan, dataflow=dataflow,
                 costs=tuple(sorted(costs.items())), source="loaded",
@@ -743,6 +828,8 @@ class CompiledNetwork:
     fused: bool = False      # epilogues flushed in-kernel (pallas mode)
     autotuned: bool = False  # schedules are measured winners
     graph: Optional[StreamGraph] = None   # the graph actually lowered
+    precision: str = "fp32"  # streamed conv dtype ("fp32" | "int8")
+    quant: Optional[Any] = None  # the QuantRecipe the int8 lowering baked in
 
     def __call__(self, params: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
         return self.apply(params, x)
@@ -766,6 +853,7 @@ class CompiledNetwork:
         lines = [f"CompiledNetwork(mode={self.mode}, "
                  f"interpret={self.interpret}, fused={self.fused}, "
                  f"autotuned={self.autotuned}, "
+                 f"precision={self.precision}, "
                  f"layers={len(self.layer_schedules)}, "
                  f"schedules={self.distinct_schedules})"]
         for name, sched in self.layer_schedules:
@@ -805,8 +893,11 @@ def _verify_graph(original, fused_graph, fused: bool) -> None:
 def _verify_schedule(name: str, cv: ConvLoopNest, sched: "ConvSchedule",
                      epi, groups: int) -> None:
     """Prove one conv layer's schedule before its kernel is bound: the
-    clamped block plan's invariants, then the full launch geometry's
-    index-map coverage/race analysis (``FoldKernelSpec``)."""
+    clamped block plan's invariants (including, for int8 schedules, the
+    int32-accumulator overflow bound), then the full launch geometry's
+    index-map coverage/race analysis (``FoldKernelSpec``).  ``epi`` is
+    the epilogue the kernel actually flushes — the requant form for int8
+    schedules."""
     plan = sched.plan.clamped(cv.nf, cv.c, cv.p)
     key = (sched.key, sched.dataflow, plan, epi, cv.n,
            cv.padded_x, cv.padded_y)
@@ -816,7 +907,7 @@ def _verify_schedule(name: str, cv: ConvLoopNest, sched: "ConvSchedule",
     from repro.analysis.plan_check import check_plan
     from repro.analysis.report import FoldLintError
     from repro.kernels.conv2d_ws import fold_kernel_spec
-    rep = check_plan(cv, plan, where=name)
+    rep = check_plan(cv, plan, where=name, precision=sched.key.precision)
     if rep.ok:
         spec = fold_kernel_spec(
             (cv.n, cv.c, cv.padded_x, cv.padded_y),
@@ -843,7 +934,9 @@ def compile_network(params: Dict[str, Any],
                     autotune_reps: int = 3,
                     autotune_timer: Optional[Callable] = None,
                     verify: bool = True,
-                    tracer=None
+                    tracer=None,
+                    precision: str = "fp32",
+                    quant=None
                     ) -> CompiledNetwork:
     """Lower a streaming graph into a static fold schedule + jitted forward.
 
@@ -890,7 +983,20 @@ def compile_network(params: Dict[str, Any],
     Error-severity findings raise ``FoldLintError``.  Verification is
     memoized per schedule geometry (``_VERIFIED_SCHEDULES``), so the
     steady-state cost of the default is one dict lookup per layer.
+
+    ``precision="int8"`` lowers every conv through the quantized fold
+    stream (``core/quant.py``): int8 weight/activation blocks, int32
+    in-kernel accumulation, dequant folded into the epilogue scale/shift
+    slot.  ``quant`` supplies the calibrated ``QuantRecipe``; when None,
+    a deterministic standard-normal calibration batch
+    (``default_calib_batch``) runs the fp32 reference forward once to
+    record per-conv activation scales.  Schedules live under int8
+    ``ScheduleKey``s (the traffic model prices the 1-byte streams, which
+    can flip the WS/OS choice), and verification proves the int32
+    accumulator bound on top of the usual invariants.
     """
+    from repro.core.quant import check_precision
+    check_precision(precision)
     # explicit None-check: an empty ScheduleCache is falsy (len 0) but
     # must still be used, so its stats/schedules reach the caller
     cache = cache if cache is not None else ScheduleCache()
@@ -909,6 +1015,13 @@ def compile_network(params: Dict[str, Any],
     g = fuse_graph(base_graph) if fused else base_graph
     if verify:
         _verify_graph(base_graph, g, fused)
+    if precision == "int8" and quant is None:
+        # self-contained calibration: the fp32 reference forward over a
+        # small deterministic batch records each conv's activation scale
+        # (fusion preserves conv node names, so the recipe keys match)
+        from repro.core.quant import default_calib_batch, quantize_graph
+        quant = quantize_graph(base_graph, params,
+                               default_calib_batch(input_shape))
 
     # -- shape-inferring walk: one step per node, schedules built eagerly --
     shapes: Dict[str, Tuple[int, ...]] = {g.input: tuple(input_shape)}
@@ -966,23 +1079,35 @@ def compile_network(params: Dict[str, Any],
                 sched = cache.autotune_for(
                     cv, reps=autotune_reps,
                     interpret=interpret if mode == "pallas" else None,
-                    epilogue=epi, timer=autotune_timer)
+                    epilogue=epi, timer=autotune_timer,
+                    precision=precision)
             else:
-                sched = cache.schedule_for(cv)
+                sched = cache.schedule_for(cv, precision=precision)
             if tracer is not None:
                 tracer.add_span(f"plan:{nd.name}", "compile", 3, _tp0,
                                 float(tracer.clock()) - _tp0,
                                 schedule=str(sched.key),
                                 dataflow=sched.dataflow,
                                 source=sched.source)
+            x_scale = None
+            if precision == "int8":
+                x_scale = quant.scale_for(nd.name)
             if verify and mode == "pallas":
-                _verify_schedule(nd.name, cv, sched, epi, groups)
+                if precision == "int8":
+                    # verify the epilogue the kernel actually flushes —
+                    # the requant affine always occupies the scale slot
+                    from repro.core.quant import requant_epilogue
+                    _verify_schedule(nd.name, cv, sched,
+                                     requant_epilogue(epi), groups)
+                else:
+                    _verify_schedule(nd.name, cv, sched, epi, groups)
             layer_schedules.append((nd.name, sched))
             po, qo = epilogue_out_hw(nd.epilogue, cv.p, cv.q)
             shapes[nd.name] = (n_, nf, po, qo)
             plan_steps.append(("conv", nd.name, nd.all_inputs(),
                                (sched, epi, nd.stride, nd.pad, nd.param,
-                                demoted_pool, groups, nd.bn_param)))
+                                demoted_pool, groups, nd.bn_param,
+                                x_scale)))
         elif nd.op == "bias":
             _need4d(nd, s_in)
             shapes[nd.name] = s_in
@@ -1032,13 +1157,34 @@ def compile_network(params: Dict[str, Any],
     def forward(p: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
         # Schedules are baked in: tracing binds the cached kernels and
         # never re-plans (no cache lookups on the hot path).
-        from repro.kernels.ops import conv2d, conv2d_fused
+        from repro.kernels.ops import conv2d, conv2d_fused, conv2d_int8
         env: Dict[str, jnp.ndarray] = {g.input: x}
         for op, out, ins, info in steps:
             if op == "conv":
                 (sched, epi, stride, pad, pname, demoted_pool, groups,
-                 bn_param) = info
+                 bn_param, x_scale) = info
                 xin, w = env[ins[0]], p[pname]["w"]
+                if precision == "int8":
+                    # quantized stream: weights quantize per-channel at
+                    # trace time, activations with the calibrated static
+                    # scale; bias/BN/dequant fold into one flush affine
+                    b = (p[pname]["b"]
+                         if epi is not None and epi.bias else None)
+                    scale = shift = None
+                    if epi is not None and epi.scale:
+                        scale, shift = bn_scale_shift(p[bn_param])
+                    res = (env[ins[1]]
+                           if epi is not None and epi.residual else None)
+                    y = conv2d_int8(
+                        xin, w, b, x_scale=x_scale, stride=stride,
+                        pad=pad, epilogue=epi,
+                        impl=("direct" if mode == "reference"
+                              else sched.impl()),
+                        plan=sched.plan, interpret=interpret,
+                        residual=res, scale=scale, shift=shift,
+                        groups=groups)
+                    env[out] = maxpool2x2(y) if demoted_pool else y
+                    continue
                 if epi is not None:
                     # an epilogue on a conv node is graph semantics and is
                     # honored in every mode; in pallas mode it flushes
@@ -1115,7 +1261,8 @@ def compile_network(params: Dict[str, Any],
                            layer_schedules=tuple(layer_schedules),
                            build_stats=build_stats, cache=cache,
                            mode=mode, interpret=interpret,
-                           fused=fused, autotuned=autotune, graph=g)
+                           fused=fused, autotuned=autotune, graph=g,
+                           precision=precision, quant=quant)
 
 
 # --------------------------------------------------------------------------
@@ -1137,6 +1284,11 @@ class BucketCompiler:
     planning and tuning are pay-once across buckets, only the XLA trace
     is per-bucket.  With ``tuning_path`` the measured winners round-trip
     through one JSON shared by all buckets (and by later sessions).
+
+    ``precision="int8"``: one ``QuantRecipe`` is calibrated eagerly here
+    (or supplied via ``quant``) and shared by every bucket, so all bucket
+    widths bake in bitwise-identical scales — a request's logits cannot
+    depend on which bucket its batch padded to.
     """
 
     def __init__(self, params: Dict[str, Any], graph,
@@ -1147,12 +1299,22 @@ class BucketCompiler:
                  tuning_path: Optional[str] = None,
                  autotune_reps: int = 3,
                  autotune_timer: Optional[Callable] = None,
-                 verify: bool = True, tracer=None):
+                 verify: bool = True, tracer=None,
+                 precision: str = "fp32", quant=None):
+        from repro.core.quant import (check_precision, default_calib_batch,
+                                      quantize_graph)
+        check_precision(precision)
         self.params = params
         self.graph = as_graph(graph)
         self.img = int(img)
         self.chan = int(chan)
         self.policy = policy
+        self.precision = precision
+        if precision == "int8" and quant is None:
+            quant = quantize_graph(
+                self.graph, params,
+                default_calib_batch((4, self.chan, self.img, self.img)))
+        self.quant = quant
         self.cache = cache if cache is not None else ScheduleCache()
         self.head = head
         self.jit = jit
@@ -1189,7 +1351,8 @@ class BucketCompiler:
                 autotune=self.autotune, tuning_path=self.tuning_path,
                 autotune_reps=self.autotune_reps,
                 autotune_timer=self.autotune_timer, verify=self.verify,
-                tracer=self.tracer)
+                tracer=self.tracer, precision=self.precision,
+                quant=self.quant)
             self._nets[batch] = net
         return net
 

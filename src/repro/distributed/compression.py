@@ -10,6 +10,11 @@ step: quantize -> dequantize around the (XLA-inserted) all-reduce, so the
 reduction happens on values representable in int8.  On a real deployment the
 quantized payload itself would cross the wire via a shard_map custom
 all-reduce (``compressed_psum``).
+
+The per-tensor symmetric scheme itself lives in ``core/quant.py`` (the
+int8 fold-streaming path and this gradient-compression path share one
+definition); ``quantize_int8`` / ``dequantize_int8`` are re-exported here
+unchanged for the existing public API.
 """
 from __future__ import annotations
 
@@ -18,21 +23,10 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import dequantize_int8, quantize_int8
+
 __all__ = ["quantize_int8", "dequantize_int8", "int8_roundtrip",
            "compressed_psum", "ErrorFeedback"]
-
-
-def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32))) + 1e-12
-    scale = amax / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
-                 ).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
-                    dtype=jnp.float32) -> jnp.ndarray:
-    return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
 def int8_roundtrip(tree: Any) -> Any:

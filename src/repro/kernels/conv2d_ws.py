@@ -78,25 +78,30 @@ DATAFLOWS = ("weight_stationary", "output_stationary", "depthwise")
 
 
 def _fold_partial(xv, w_ref, i_p, *, r: int, s: int, stride: int,
-                  p_block: int, q: int):
+                  p_block: int, q: int, acc_dtype=jnp.float32):
     """One fold interaction (Fig 4): R*S stationary taps against a strided
-    window of the resident image rows.  Returns (nf_b, p_block, q) fp32."""
+    window of the resident image rows.  Returns (nf_b, p_block, q) in
+    ``acc_dtype`` — fp32 for the fp32 path, int32 for int8 streams (the
+    MXU contracts the int8 operands directly and widens per-product; the
+    int32 depth-fold accumulation is exact, see ``core/quant.py``)."""
     nf_b = w_ref.shape[0]
     row0 = i_p * p_block * stride
     rows = (p_block - 1) * stride + r
     xwin = jax.lax.dynamic_slice(
         xv, (0, row0, 0), (xv.shape[0], rows, xv.shape[2]))
-    acc = jnp.zeros((nf_b, p_block, q), dtype=jnp.float32)
+    acc = jnp.zeros((nf_b, p_block, q), dtype=acc_dtype)
     for ri in range(r):
         for si in range(s):
             win = xwin[:, ri:ri + p_block * stride:stride,
                        si:si + q * stride:stride]        # (c_b, p_b, Q)
             tap = w_ref[:, :, ri, si]                    # (nf_b, c_b)
+            if acc_dtype == jnp.float32:
+                tap = tap.astype(jnp.float32)
+                win = win.astype(jnp.float32)
             acc += jax.lax.dot_general(
-                tap.astype(jnp.float32),
-                win.reshape(win.shape[0], -1).astype(jnp.float32),
+                tap, win.reshape(win.shape[0], -1),
                 (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
+                preferred_element_type=acc_dtype,
             ).reshape(acc.shape)
     return acc
 
@@ -124,7 +129,8 @@ def _flush_value(v, b_ref, epi: Epilogue, res=None):
 
 
 def _ws_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
-               stride: int, p_block: int, q: int, n_c: int, epi: Epilogue):
+               stride: int, p_block: int, q: int, n_c: int, epi: Epilogue,
+               acc_dtype=jnp.float32):
     """Weight-stationary with in-kernel depth reduction.
 
     Grid: (N, nf, c, p); p fastest.  ``acc_ref`` holds the full output
@@ -133,14 +139,16 @@ def _ws_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
     revisited contiguously across the whole (c, p) sweep and flushed (with
     the epilogue) as each P slice finishes its last depth fold.  With
     ``epi.residual`` an extra shortcut input rides along (full-height,
-    resident like the output) and is added at flush time.
+    resident like the output) and is added at flush time.  Int8 streams
+    accumulate in an int32 ``acc_ref``; the flush-time cast to fp32 is
+    where the requant affine (folded into the scale/shift slot) applies.
     """
     res_ref, (out_ref, acc_ref) = (refs[0] if epi.residual else None,
                                    refs[-2:])
     i_c = pl.program_id(2)
     i_p = pl.program_id(3)
     part = _fold_partial(x_ref[0], w_ref, i_p, r=r, s=s, stride=stride,
-                         p_block=p_block, q=q)
+                         p_block=p_block, q=q, acc_dtype=acc_dtype)
     row0 = i_p * p_block
 
     @pl.when(i_c == 0)
@@ -155,8 +163,9 @@ def _ws_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
     def _flush():
         res = (res_ref[0, :, pl.ds(row0, p_block), :]
                if epi.residual else None)
-        v = _flush_value(acc_ref[:, pl.ds(row0, p_block), :], b_ref, epi,
-                         res)
+        v = _flush_value(
+            acc_ref[:, pl.ds(row0, p_block), :].astype(jnp.float32),
+            b_ref, epi, res)
         if epi.pool == "max2":
             out_ref[0, :, pl.ds(i_p * (p_block // 2), p_block // 2), :] = (
                 v.astype(out_ref.dtype))
@@ -165,14 +174,15 @@ def _ws_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
 
 
 def _os_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
-               stride: int, p_block: int, q: int, n_c: int, epi: Epilogue):
+               stride: int, p_block: int, q: int, n_c: int, epi: Epilogue,
+               acc_dtype=jnp.float32):
     """Output-stationary variant. Grid: (N, nf, p, c); c fastest."""
     res_ref, (out_ref, acc_ref) = (refs[0] if epi.residual else None,
                                    refs[-2:])
     i_p = pl.program_id(2)
     i_c = pl.program_id(3)
     part = _fold_partial(x_ref[0], w_ref, i_p, r=r, s=s, stride=stride,
-                         p_block=p_block, q=q)
+                         p_block=p_block, q=q, acc_dtype=acc_dtype)
 
     @pl.when(i_c == 0)
     def _init():
@@ -185,18 +195,21 @@ def _os_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
     @pl.when(i_c == n_c - 1)
     def _flush():
         res = res_ref[0] if epi.residual else None
-        out_ref[0] = _flush_value(acc_ref[...], b_ref, epi,
-                                  res).astype(out_ref.dtype)
+        out_ref[0] = _flush_value(acc_ref[...].astype(jnp.float32), b_ref,
+                                  epi, res).astype(out_ref.dtype)
 
 
 def _dw_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
-               stride: int, p_block: int, q: int, epi: Epilogue):
+               stride: int, p_block: int, q: int, epi: Epilogue,
+               acc_dtype=jnp.float32):
     """Depthwise kernel: grid (N, c folds, p folds) — **no depth-fold
     reduction exists**.  Each channel owns exactly one filter, so a grid
     step's (c_b, p_block, q) output is finished the moment its R*S taps
     have accumulated: the taps multiply the resident channel rows
     elementwise on the VPU (no MXU contraction — there is no channel sum),
-    and the epilogue flushes immediately, every step.
+    and the epilogue flushes immediately, every step.  Int8 streams widen
+    each operand to int32 *before* the elementwise product (int8 x int8
+    would wrap) and accumulate the R*S taps exactly.
     """
     res_ref, out_ref = (refs[0] if epi.residual else None, refs[-1])
     i_p = pl.program_id(2)
@@ -205,16 +218,17 @@ def _dw_kernel(x_ref, w_ref, b_ref, *refs, r: int, s: int,
     rows = (p_block - 1) * stride + r
     xwin = jax.lax.dynamic_slice(
         xv, (0, row0, 0), (xv.shape[0], rows, xv.shape[2]))
-    acc = jnp.zeros((xv.shape[0], p_block, q), dtype=jnp.float32)
+    acc = jnp.zeros((xv.shape[0], p_block, q), dtype=acc_dtype)
     for ri in range(r):
         for si in range(s):
             win = xwin[:, ri:ri + p_block * stride:stride,
                        si:si + q * stride:stride]      # (c_b, p_b, q)
             tap = w_ref[:, 0, ri, si]                  # (c_b,)
-            acc += (win.astype(jnp.float32)
-                    * tap.astype(jnp.float32)[:, None, None])
+            acc += (win.astype(acc_dtype)
+                    * tap.astype(acc_dtype)[:, None, None])
     res = res_ref[0] if epi.residual else None
-    out_ref[0] = _flush_value(acc, b_ref, epi, res).astype(out_ref.dtype)
+    out_ref[0] = _flush_value(acc.astype(jnp.float32), b_ref, epi,
+                              res).astype(out_ref.dtype)
 
 
 def _ws_psum_kernel(x_ref, w_ref, out_ref, *, r: int, s: int, stride: int,
@@ -610,6 +624,15 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     ``core/epilogue.py``.  ``groups > 1`` streams per-group depth folds
     (``dataflow="depthwise"`` selects the dedicated no-reduction kernel
     for the G == C == N_F case).
+
+    An **int8 x** (with int8 ``w``) selects the quantized stream: depth
+    folds accumulate in an int32 VMEM scratch and the output defaults to
+    fp32 — the caller bakes the combined dequant into the scale/shift
+    vectors (``core/quant.py:requant_affine``; ``kernels/ops.conv2d_int8``
+    is the packaged entry point).  The legacy psum dataflow stages raw
+    accumulator folds through HBM with no flush hook to dequantize at, so
+    it rejects int8 (unreachable from the engine anyway: the requant
+    epilogue is never identity, which psum requires).
     """
     n, c, xp_, yp_ = x_padded.shape
     nf, cw, r, s = w.shape
@@ -617,7 +640,20 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     assert nf % groups == 0, (nf, groups)
     p = (xp_ - r) // stride + 1
     q = (yp_ - s) // stride + 1
-    out_dtype = out_dtype or x_padded.dtype
+    quantized = x_padded.dtype == jnp.int8
+    if quantized:
+        if w.dtype != jnp.int8:
+            raise ValueError(f"int8 activations need int8 weights, got "
+                             f"w dtype {w.dtype}")
+        if dataflow == "weight_stationary_psum":
+            raise ValueError("the legacy psum dataflow cannot stream int8 "
+                             "(its HBM-staged partial sums have no flush "
+                             "hook to apply the dequant scale at)")
+        acc_dtype = jnp.int32
+        out_dtype = out_dtype or jnp.float32
+    else:
+        acc_dtype = jnp.float32
+        out_dtype = out_dtype or x_padded.dtype
     epi = epilogue or Epilogue()
     if epi.bias and bias is None:
         raise ValueError("epilogue.bias=True needs a bias vector")
@@ -638,6 +674,11 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     spec = fold_kernel_spec(tuple(x_padded.shape), tuple(w.shape),
                             stride=stride, plan=plan, dataflow=dataflow,
                             epilogue=epi, groups=groups)
+    if quantized and spec.dataflow == "weight_stationary_psum":
+        # the WS VMEM-spill fallback can land here only for an identity
+        # epilogue — which an int8 stream never has (requant is an affine)
+        raise ValueError("int8 weight_stationary spilled to psum staging, "
+                         "which cannot dequantize; use output_stationary")
     nf_b = spec.plan.nf_block
     p_b, q_v = spec.p_block, spec.q_valid
 
@@ -654,7 +695,8 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
 
     if spec.dataflow == "depthwise":
         kern = functools.partial(_dw_kernel, r=r, s=s, stride=stride,
-                                 p_block=p_b, q=q, epi=epi)
+                                 p_block=p_b, q=q, epi=epi,
+                                 acc_dtype=acc_dtype)
         out = pl.pallas_call(
             kern, grid=spec.grid, in_specs=in_specs,
             out_specs=spec.output.block_spec(), out_shape=out_shape,
@@ -676,14 +718,15 @@ def conv2d_folded(x_padded: jnp.ndarray, w: jnp.ndarray, *,
     if spec.dataflow == "weight_stationary":
         kern = functools.partial(_ws_kernel, r=r, s=s, stride=stride,
                                  p_block=p_b, q=q, n_c=spec.cg_folds,
-                                 epi=epi)
-        # full-height accumulator: the paper's reserved-column partial sums
-        scratch = pltpu.VMEM((nf_b, spec.p_pad, q), jnp.float32)
+                                 epi=epi, acc_dtype=acc_dtype)
+        # full-height accumulator: the paper's reserved-column partial
+        # sums (int32 for int8 streams — same 4 bytes/elem footprint)
+        scratch = pltpu.VMEM((nf_b, spec.p_pad, q), acc_dtype)
     else:  # output_stationary
         kern = functools.partial(_os_kernel, r=r, s=s, stride=stride,
                                  p_block=p_b, q=q, n_c=spec.cg_folds,
-                                 epi=epi)
-        scratch = pltpu.VMEM((nf_b, p_b, q), jnp.float32)
+                                 epi=epi, acc_dtype=acc_dtype)
+        scratch = pltpu.VMEM((nf_b, p_b, q), acc_dtype)
     out = pl.pallas_call(
         kern, grid=spec.grid, in_specs=in_specs,
         out_specs=spec.output.block_spec(), out_shape=out_shape,

@@ -37,7 +37,8 @@ from repro.kernels import ref as _ref
 from repro.kernels.conv1d_causal import conv1d_causal_folded
 from repro.kernels.conv2d_ws import conv2d_folded
 
-__all__ = ["conv2d", "conv2d_fused", "conv1d_causal", "default_conv_impl"]
+__all__ = ["conv2d", "conv2d_fused", "conv2d_int8", "conv1d_causal",
+           "default_conv_impl"]
 
 
 def default_conv_impl() -> str:
@@ -254,6 +255,74 @@ def conv2d_fused(x: jnp.ndarray, w: jnp.ndarray,
     fwd_impl = impl or default_conv_impl()
     return _conv2d_fused(x, w, b, scale, shift, residual, stride, pad, epi,
                          fwd_impl, plan, interpret, groups)
+
+
+# ---------------------------------------------------------------------------
+# Int8 quantized conv + epilogue (inference-only)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_int8(x: jnp.ndarray, w: jnp.ndarray,
+                b: Optional[jnp.ndarray] = None, *, x_scale,
+                stride: int = 1, pad: int = 0,
+                epilogue: Optional[Epilogue] = None,
+                impl: Optional[str] = None, plan=None,
+                interpret: Optional[bool] = None,
+                residual: Optional[jnp.ndarray] = None,
+                scale: Optional[jnp.ndarray] = None,
+                shift: Optional[jnp.ndarray] = None,
+                groups: int = 1) -> jnp.ndarray:
+    """Int8 quantized convolution with the requantizing epilogue.
+
+    ``x``/``w`` are the *fp32* tensors; ``x_scale`` is the calibrated
+    per-tensor activation scale (``core/quant.py:quantize_graph``).  The
+    weights quantize per-output-channel at trace time, the activations
+    quantize with the static calibrated scale, and the combined dequant
+    ``w_scale * x_scale`` folds — together with bias and folded-BN —
+    into the flush-time scale/shift affine (``requant_affine``), so the
+    epilogue contract is unchanged: residual / ReLU[6] / pool run in fp32
+    after the affine, and the fold impls still lower to one
+    ``pallas_call`` per conv (streaming int8 blocks, accumulating int32).
+
+    Inference-only by design: no custom VJP — straight-through gradients
+    of a static-range PTQ net are a training technique (QAT) this engine
+    does not model.  Output is fp32.
+    """
+    from repro.core.quant import (quantize_act_jit, quantize_weight_jit,
+                                  requant_affine, requant_epilogue)
+    epi = epilogue or Epilogue()
+    if epi.bias and b is None:
+        raise ValueError("epilogue.bias=True needs a bias vector")
+    if epi.scale != (scale is not None and shift is not None):
+        raise ValueError("epilogue.scale and the scale/shift arguments "
+                         "must be supplied together")
+    if epi.residual != (residual is not None):
+        raise ValueError("epilogue.residual and the residual argument must "
+                         "be supplied together")
+    wq, w_scale = quantize_weight_jit(w)
+    xq = quantize_act_jit(x, x_scale)
+    comb_scale, comb_shift = requant_affine(
+        w_scale * jnp.float32(x_scale), epi, b, scale, shift)
+    epi_q = requant_epilogue(epi)
+    fwd_impl = impl or default_conv_impl()
+    if fwd_impl in _FOLD_IMPLS:
+        plan, dataflow = _resolve_fold_dataflow(xq, wq, stride, pad,
+                                                fwd_impl, plan, groups)
+        xp = jnp.pad(xq, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        return conv2d_folded(xp, wq, stride=stride, dataflow=dataflow,
+                             plan=plan, interpret=interpret,
+                             epilogue=epi_q, residual=residual,
+                             scale=comb_scale, shift=comb_shift,
+                             groups=groups)
+    # reference path: the same int8 operands through XLA's conv with an
+    # int32 accumulator, then the identical requant epilogue chain — so
+    # reference and pallas int8 modes share one quantization error
+    acc = jax.lax.conv_general_dilated(
+        xq, wq, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups, preferred_element_type=jnp.int32)
+    return apply_epilogue(acc.astype(jnp.float32), None, epi_q, residual,
+                          comb_scale, comb_shift)
 
 
 # ---------------------------------------------------------------------------

@@ -177,9 +177,15 @@ def vision_main(args) -> dict:
             autotune=args.autotune, tuning_path=args.tuning_path or None,
             deadline_s=args.deadline_s or None,
             deadline_every=args.deadline_every,
-            guard=guard, tracer=tracer, registry=registry, verbose=True)
+            guard=guard, tracer=tracer, registry=registry,
+            precision=args.precision, verbose=True)
     write_obs_artifacts(args, tracer, registry)
-    merge_bench_json(summary, args.bench_json, model=args.model)
+    # int8 serves land under their own section so the fp32 serving
+    # baselines the perf gate compares are never clobbered
+    section = "serving" if args.precision == "fp32" else \
+        f"serving_{args.precision}"
+    merge_bench_json(summary, args.bench_json, model=args.model,
+                     section=section)
     return summary
 
 
@@ -234,6 +240,10 @@ def main():
     ap.add_argument("--img", type=int, default=32)
     ap.add_argument("--width", type=float, default=0.0625,
                     help="model width multiplier")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="streaming precision for the compiled forwards; "
+                         "int8 metrics merge under serving_int8_by_model")
     ap.add_argument("--buckets", default="1,2,4,8",
                     help="comma-separated batch bucket widths")
     ap.add_argument("--mesh", default="",

@@ -41,13 +41,17 @@ def model_layer_stats(sched: ConvSchedule, pe: PEArray,
     cfg = cfg or MavecConfig()
     nest = sched.nest
     lp = layer_perf(nest, pe, cfg)
-    traffic = dataflow_traffic_bytes(nest, sched.plan, cfg.bytes_per_elem)
+    # bytes are modeled at the *streamed* dtype: int8 schedules move
+    # 1-byte weight/activation folds (psum staging stays 4-byte int32)
+    traffic = dataflow_traffic_bytes(nest, sched.plan, cfg.bytes_per_elem,
+                                     precision=sched.key.precision)
     bytes_batch = traffic.get(sched.dataflow,
                               traffic.get("weight_stationary", 0.0))
     n = max(nest.n, 1)
     return {
         "key": str(sched.key),
         "dataflow": sched.dataflow,
+        "precision": sched.key.precision,
         "util_model_pct": round(lp.util_avg_pct, 2),
         "t_ops_cycles": lp.t_ops,
         "gflops_model": round(lp.gflops, 2),
@@ -77,6 +81,7 @@ class _SchedCounters:
         return {
             "key": m["key"],
             "dataflow": m["dataflow"],
+            "precision": m["precision"],
             "layers": list(self.layers),
             "util_model_pct": m["util_model_pct"],
             "t_ops_cycles": m["t_ops_cycles"],

@@ -211,7 +211,7 @@ class VisionEngine:
                  chaos=None, hang_timeout_s: float = 30.0,
                  admission: Optional[AdmissionController] = None,
                  tracer=None, registry: Optional[MetricsRegistry] = None,
-                 fold_pe=None):
+                 fold_pe=None, precision: str = "fp32"):
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.registry = registry
         bucket_policy = BucketPolicy(buckets)
@@ -241,7 +241,8 @@ class VisionEngine:
             params, graph, img, chan=chan, policy=policy, cache=cache,
             head=head, fuse_epilogues=fuse_epilogues, autotune=autotune,
             tuning_path=tuning_path, autotune_timer=autotune_timer,
-            tracer=self.tracer if self.tracer.enabled else None)
+            tracer=self.tracer if self.tracer.enabled else None,
+            precision=precision)
         self.metrics = ServingMetrics()
         self.chaos = chaos
         if chaos is not None and getattr(chaos, "tracer", None) in \
@@ -450,10 +451,14 @@ class VisionEngine:
         if self.compiler.policy == "reference":
             return self.compiler
         if self._ref_compiler is None:
+            # the same precision AND the same calibrated recipe: a request
+            # retried on the reference rung must see bitwise-identical
+            # scales, or degradation would change its numerics
             self._ref_compiler = BucketCompiler(
                 self.params, self.compiler.graph, self.batcher.img,
                 chan=self.batcher.chan, policy="reference",
-                cache=self.compiler.cache, head=self.compiler.head)
+                cache=self.compiler.cache, head=self.compiler.head,
+                precision=self.compiler.precision, quant=self.compiler.quant)
         return self._ref_compiler
 
     def _reference_forward(self, reqs: List[ImageRequest]) -> np.ndarray:
@@ -671,6 +676,7 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
                     guard=None,
                     tracer=None,
                     registry: Optional[MetricsRegistry] = None,
+                    precision: str = "fp32",
                     verbose: bool = False) -> dict:
     """Serve a deterministic mixed-size random request stream through a
     reduced-width registered model (``models/zoo.py``) and return the
@@ -690,7 +696,7 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
     engine = VisionEngine(params, spec.to_graph(), img=img, policy=policy,
                           buckets=buckets, mesh=mesh, autotune=autotune,
                           tuning_path=tuning_path, tracer=tracer,
-                          registry=registry)
+                          registry=registry, precision=precision)
     engine.warmup()
     rng = np.random.default_rng(seed)
     max_n = engine.batcher.policy.max_width
@@ -710,6 +716,7 @@ def serving_summary(model: str, *, requests: int = 32, img: int = 32,
     d = engine.metrics_dict()
     d["workload"] = {"model": model, "width_mult": width_mult, "img": img,
                      "requests": int(requests), "policy": policy,
+                     "precision": precision,
                      "seed": seed, "backend": jax.default_backend(),
                      "deadline_s": deadline_s, "preempted": preempted}
     if verbose:
