@@ -39,6 +39,19 @@ Three metric classes, three disciplines:
   both are deterministic (analytic bytes; fixed seed, fixed scheme), so
   any drop means the quantized path got leakier or less faithful, never
   machine noise.
+* **transport** — ceilings for the HTTP serving tier's loss-shaped rates
+  (``benchmarks/run_async_requests.py``): a fresh value *above* baseline
+  fails (the mirror image of the floor sections — shedding more of the
+  smoke's deadline-free traffic than baseline is a regression, shedding
+  less passes).  The wire-level ``transport.lost_requests`` gates in
+  **exact** at 0 and sustained wire KIPS rides the **throughput** band.
+
+Because the per-PR CI produces the core sections and the transport
+section in *different jobs* (each runs only its own workload), the gate
+takes ``--scope {all,core,transport}``: both fresh and baseline are
+filtered to the scope's metrics before comparing, and ``--update``
+merges only in-scope metrics into the committed baseline.  Nightly runs
+both workloads into one snapshot and gates with the default ``all``.
 
 A fresh metric with no baseline entry fails the gate too (it means the
 baseline predates the metric — re-baseline deliberately, not silently).
@@ -74,7 +87,7 @@ def extract(bench: dict) -> dict:
     baseline file stores exactly this distillation (stable under bench
     sections the gate doesn't police)."""
     out = {"exact": {}, "latency": {}, "throughput": {}, "robustness": {},
-           "observability": {}, "quantization": {}}
+           "observability": {}, "quantization": {}, "transport": {}}
 
     def model_section(name: str, sec: dict) -> None:
         fr = sec.get("fold_reuse", {})
@@ -120,7 +133,37 @@ def extract(bench: dict) -> dict:
         for k in ("stream_bytes_ratio", "top1_agreement"):
             if k in sec:
                 out["quantization"][f"quant.{m}.{k}"] = float(sec[k])
+    tr = bench.get("transport")
+    if isinstance(tr, dict):
+        if "lost_requests" in tr:     # the zero-loss invariant, on the wire
+            out["exact"]["transport.lost_requests"] = \
+                int(tr["lost_requests"])
+        if "kips" in tr:              # sustained wire KIPS: throughput band
+            out["throughput"]["transport.kips"] = float(tr["kips"])
+        if "shed_rate" in tr:         # loss-shaped rate: gates as a ceiling
+            out["transport"]["transport.shed_rate"] = float(tr["shed_rate"])
     return out
+
+
+SCOPES = ("all", "core", "transport")
+
+
+def scope_filter(dist: dict, scope: str, invert: bool = False) -> dict:
+    """Keep only the metrics belonging to ``scope`` (``invert`` keeps the
+    complement — what a scoped --update preserves from the old baseline).
+    Transport metrics are exactly those named ``transport.*``; they live
+    across sections (exact/throughput/transport), so filtering is by
+    metric prefix, not by section."""
+    if scope == "all":
+        return {sec: dict(metrics) if not invert else {}
+                for sec, metrics in dist.items()}
+    is_transport = scope == "transport"
+
+    def keep(metric: str) -> bool:
+        return metric.startswith("transport.") == (is_transport != invert)
+
+    return {sec: {m: v for m, v in metrics.items() if keep(m)}
+            for sec, metrics in dist.items()}
 
 
 def validate_baseline(baseline) -> list:
@@ -134,7 +177,7 @@ def validate_baseline(baseline) -> list:
                 f"{type(baseline).__name__}"]
     known = {"exact": int, "latency": float, "throughput": float,
              "robustness": float, "observability": float,
-             "quantization": float}
+             "quantization": float, "transport": float}
     for section, want in known.items():
         sec = baseline.get(section)
         if sec is None:
@@ -164,7 +207,7 @@ def validate_baseline(baseline) -> list:
     for section in sorted(set(baseline) - set(known)):
         problems.append(f"unknown section {section!r} (want exact / "
                         f"latency / throughput / robustness / "
-                        f"observability / quantization)")
+                        f"observability / quantization / transport)")
     return problems
 
 
@@ -232,10 +275,22 @@ def compare(fresh: dict, baseline: dict, tol: float) -> list:
                           f"{got:.4f} vs baseline floor {base:.4f} — the "
                           "int8 path moves more bytes or agrees less "
                           "with the fp32 oracle than baseline"))
+    # transport rates are ceilings — the smoke's traffic carries no
+    # deadlines, so shedding *more* of it than baseline is a regression
+    # of the wire path, while shedding less (or equal) passes
+    for metric, base in sorted(baseline.get("transport", {}).items()):
+        got = fresh["transport"].get(metric)
+        if got is None:
+            fails.append(("transport", metric, "missing from fresh bench"))
+        elif got > base:
+            fails.append(("transport", metric,
+                          f"{got:.4f} vs baseline ceiling {base:.4f} — "
+                          "the wire is shedding/losing traffic the "
+                          "baseline served"))
     # a metric the baseline has never seen means the baseline rotted —
     # every class, or a new model's metrics would be silently ungated
     for kind in ("exact", "latency", "throughput", "robustness",
-                 "observability", "quantization"):
+                 "observability", "quantization", "transport"):
         for metric in sorted(fresh[kind]):
             if metric not in baseline.get(kind, {}):
                 fails.append((kind, metric,
@@ -252,18 +307,35 @@ def main(argv=None) -> int:
                                                  DEFAULT_TOL)))
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the fresh bench "
-                         "instead of gating against it")
+                         "instead of gating against it (scoped: only "
+                         "in-scope metrics are replaced)")
+    ap.add_argument("--scope", choices=SCOPES, default="all",
+                    help="gate only this workload's metrics: 'core' for "
+                         "the micro/serving jobs, 'transport' for the "
+                         "HTTP load-generator job, 'all' for nightly")
     args = ap.parse_args(argv)
 
     with open(args.bench) as f:
-        fresh = extract(json.load(f))
+        fresh = scope_filter(extract(json.load(f)), args.scope)
 
     if args.update:
+        merged = fresh
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                old = json.load(f)
+            if isinstance(old, dict):
+                # out-of-scope metrics survive a scoped re-baseline
+                kept = scope_filter(
+                    {k: v for k, v in old.items() if isinstance(v, dict)},
+                    args.scope, invert=True)
+                merged = {sec: {**kept.get(sec, {}), **fresh.get(sec, {})}
+                          for sec in set(kept) | set(fresh)}
         with open(args.baseline, "w") as f:
-            json.dump(fresh, f, indent=2, sort_keys=True)
+            json.dump(merged, f, indent=2, sort_keys=True)
             f.write("\n")
-        n = sum(len(v) for v in fresh.values())
-        print(f"# baseline updated: {n} gated metrics -> {args.baseline}")
+        n = sum(len(v) for v in merged.values())
+        print(f"# baseline updated: {n} gated metrics -> {args.baseline} "
+              f"(scope {args.scope})")
         return 0
 
     if not os.path.exists(args.baseline):
@@ -280,21 +352,22 @@ def main(argv=None) -> int:
         for p in problems:
             print(f"  {p}", file=sys.stderr)
         return 1
+    baseline = scope_filter(baseline, args.scope)
 
     fails = compare(fresh, baseline, args.latency_tolerance)
-    n_checked = sum(len(baseline[k]) for k in
+    n_checked = sum(len(baseline.get(k, {})) for k in
                     ("exact", "latency", "throughput", "robustness",
-                     "observability", "quantization"))
+                     "observability", "quantization", "transport"))
     if fails:
         print(f"PERF GATE: {len(fails)}/{n_checked} checks failed "
-              f"(tolerance {args.latency_tolerance * 100:.0f}%):",
-              file=sys.stderr)
+              f"(scope {args.scope}, tolerance "
+              f"{args.latency_tolerance * 100:.0f}%):", file=sys.stderr)
         for kind, metric, msg in fails:
             print(f"  [{kind}] {metric}: {msg}", file=sys.stderr)
         return 1
     print(f"# perf gate OK: {n_checked} metrics within budget "
-          f"(latency tolerance {args.latency_tolerance * 100:.0f}%, "
-          "counts exact)")
+          f"(scope {args.scope}, latency tolerance "
+          f"{args.latency_tolerance * 100:.0f}%, counts exact)")
     return 0
 
 

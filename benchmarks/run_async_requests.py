@@ -1,0 +1,376 @@
+"""Async-transport load generator: measured KIPS over the wire
+(DESIGN.md §13).
+
+    # boot a server and run the CI smoke (zero-loss + metrics scrape)
+    PYTHONPATH=src python benchmarks/run_async_requests.py \\
+        --boot --backend interpret --requests 64 --concurrency 16
+
+    # the 1k-concurrency closed-loop ramp against a running server
+    PYTHONPATH=src python benchmarks/run_async_requests.py \\
+        --port 8080 --ramp 16,64,256,1024
+
+Closed loop: each stage runs C virtual users, every one a keep-alive
+HTTP connection firing mixed-size ``POST /v1/infer`` requests
+back-to-back — in-flight count equals C by construction, the classic
+saturation measurement.  Open loop (``--open-rate``): arrivals are a
+Poisson process at the target rate, independent of completions — the
+regime where queues actually grow and admission control earns its keep.
+
+Per stage and in aggregate this reports sustained KIPS (served images
+over wall clock — the paper's eq (13) unit, measured end-to-end through
+the wire instead of at the engine), p50/p95/p99 latency, shed/expired
+rates, and per-worker routing balance from ``/stats``.  The zero-loss
+invariant is asserted from both sides: every request the client sent
+got exactly one HTTP response (client-side ``lost == 0``) and the
+servers' own ``lost_requests`` accounting agrees — then the summary
+lands in the ``transport`` section of ``BENCH_vgg.json`` for
+``benchmarks/check_bench.py --scope transport`` to gate.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.launch.serve import merge_bench_json
+from repro.serve.transport import HttpClient, encode_images_payload, http_json
+
+CLIENT_OUTCOMES = {200: "ok", 429: "shed", 504: "expired", 500: "failed"}
+
+
+def percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(round(q / 100.0 * (len(ys) - 1))))]
+
+
+class StageStats:
+    """One load stage's client-side accounting."""
+
+    def __init__(self, label: str, concurrency: int):
+        self.label = label
+        self.concurrency = concurrency
+        self.sent = 0
+        self.lost = 0                 # no (or non-HTTP) response — must be 0
+        self.images_ok = 0
+        self.by_outcome: Dict[str, int] = {}
+        self.latencies: List[float] = []
+        self.elapsed_s = 0.0
+
+    def record(self, status: Optional[int], n_images: int,
+               latency_s: float) -> None:
+        self.sent += 1
+        if status is None:
+            self.lost += 1
+            return
+        outcome = CLIENT_OUTCOMES.get(status, f"http_{status}")
+        self.by_outcome[outcome] = self.by_outcome.get(outcome, 0) + 1
+        if status == 200:
+            self.images_ok += n_images
+            self.latencies.append(latency_s)
+
+    @property
+    def kips(self) -> float:
+        return (self.images_ok / self.elapsed_s / 1e3
+                if self.elapsed_s else 0.0)
+
+    def as_dict(self) -> dict:
+        ok = self.by_outcome.get("ok", 0)
+        return {
+            "label": self.label,
+            "concurrency": self.concurrency,
+            "requests": self.sent,
+            "ok": ok,
+            "shed": self.by_outcome.get("shed", 0),
+            "expired": self.by_outcome.get("expired", 0),
+            "failed": self.by_outcome.get("failed", 0),
+            "lost": self.lost,
+            "images_ok": self.images_ok,
+            "elapsed_s": round(self.elapsed_s, 4),
+            "kips": round(self.kips, 6),
+            "shed_rate": round(self.by_outcome.get("shed", 0)
+                               / self.sent, 4) if self.sent else 0.0,
+            "latency": {"p50_s": round(percentile(self.latencies, 50), 6),
+                        "p95_s": round(percentile(self.latencies, 95), 6),
+                        "p99_s": round(percentile(self.latencies, 99), 6)},
+        }
+
+
+async def _fire(client: HttpClient, payload: dict,
+                stats: StageStats, n: int) -> None:
+    t0 = time.monotonic()
+    try:
+        status, _ = await client.request("POST", "/v1/infer", payload)
+    except (ConnectionError, OSError, asyncio.IncompleteReadError):
+        status = None
+    stats.record(status, n, time.monotonic() - t0)
+
+
+async def closed_loop_stage(host: str, port: int, *, concurrency: int,
+                            requests: int, sizes: Sequence[int],
+                            payloads: Dict[int, dict],
+                            deadline_s: Optional[float]) -> StageStats:
+    """C virtual users, each a keep-alive connection firing back-to-back
+    until the shared request quota drains."""
+    stats = StageStats(f"closed-c{concurrency}", concurrency)
+    next_i = 0
+
+    async def vuser() -> None:
+        nonlocal next_i
+        client = HttpClient(host, port)
+        try:
+            while True:
+                if next_i >= requests:
+                    return
+                i = next_i
+                next_i += 1            # single-threaded loop: no race
+                n = int(sizes[i])
+                payload = payloads[n]
+                if deadline_s is not None:
+                    payload = dict(payload, deadline_s=deadline_s)
+                await _fire(client, payload, stats, n)
+        finally:
+            await client.close()
+
+    t0 = time.monotonic()
+    await asyncio.gather(*(vuser() for _ in range(concurrency)))
+    stats.elapsed_s = time.monotonic() - t0
+    return stats
+
+
+async def open_loop_stage(host: str, port: int, *, rate: float,
+                          duration_s: float, sizes: Sequence[int],
+                          payloads: Dict[int, dict], seed: int,
+                          deadline_s: Optional[float],
+                          max_inflight: int = 2048) -> StageStats:
+    """Poisson arrivals at ``rate``/s for ``duration_s`` — arrivals do
+    not wait for completions (bounded by ``max_inflight`` as a
+    file-descriptor guard, counted as shed-by-client if ever hit)."""
+    stats = StageStats(f"open-r{rate:g}", 0)
+    rng = np.random.default_rng(seed)
+    sem = asyncio.Semaphore(max_inflight)
+    tasks: List[asyncio.Task] = []
+
+    async def one(i: int) -> None:
+        async with sem:
+            client = HttpClient(host, port)
+            try:
+                n = int(sizes[i % len(sizes)])
+                payload = payloads[n]
+                if deadline_s is not None:
+                    payload = dict(payload, deadline_s=deadline_s)
+                await _fire(client, payload, stats, n)
+            finally:
+                await client.close()
+
+    t0 = time.monotonic()
+    i = 0
+    while time.monotonic() - t0 < duration_s:
+        tasks.append(asyncio.ensure_future(one(i)))
+        i += 1
+        await asyncio.sleep(float(rng.exponential(1.0 / rate)))
+    if tasks:
+        await asyncio.gather(*tasks)
+    stats.elapsed_s = time.monotonic() - t0
+    return stats
+
+
+def boot_server(args) -> subprocess.Popen:
+    """Launch ``repro.launch.server`` as a subprocess, stderr to the
+    server log, and wait for its LISTENING line."""
+    cmd = [sys.executable, "-m", "repro.launch.server",
+           "--port", "0", "--workers", str(args.workers),
+           "--model", args.model, "--backend", args.backend,
+           "--img", str(args.img), "--width", str(args.width),
+           "--buckets", args.buckets,
+           "--access-log", args.server_log]
+    if args.spawn:
+        cmd.append("--spawn")
+    log = open(args.server_log + ".boot", "w")
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, stderr=log,
+                            text=True, env=None)
+    deadline = time.monotonic() + args.boot_timeout_s
+    assert proc.stdout is not None
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            raise SystemExit(f"server exited during boot "
+                             f"(code {proc.poll()}); see {args.server_log}.boot")
+        if line.startswith("LISTENING "):
+            args.port = int(line.split()[1])
+            print(f"# booted server on port {args.port} "
+                  f"({args.workers} worker(s), {args.backend})")
+            return proc
+    proc.kill()
+    raise SystemExit("server never printed LISTENING within "
+                     f"{args.boot_timeout_s}s")
+
+
+async def run_stages(args) -> dict:
+    rng = np.random.default_rng(args.seed)
+    buckets = [int(b) for b in args.buckets.split(",")]
+    max_n = buckets[-1]
+    # one pre-encoded payload per request size: the generator must not
+    # bottleneck on base64 while measuring the server
+    payloads = {n: encode_images_payload(
+        rng.standard_normal((n, 3, args.img, args.img))
+        .astype(np.float32)) for n in range(1, max_n + 1)}
+    deadline = args.deadline_s if args.deadline_s > 0 else None
+
+    stages: List[StageStats] = []
+    ramp = [int(c) for c in args.ramp.split(",")] if args.ramp \
+        else [args.concurrency]
+    for c in ramp:
+        n_req = max(args.requests, c)
+        sizes = rng.integers(1, max_n + 1, n_req)
+        st = await closed_loop_stage(
+            args.host, args.port, concurrency=c, requests=n_req,
+            sizes=sizes, payloads=payloads, deadline_s=deadline)
+        stages.append(st)
+        d = st.as_dict()
+        print(f"# stage {d['label']}: {d['requests']} reqs in "
+              f"{d['elapsed_s']}s -> {d['kips']} KIPS, "
+              f"p95={d['latency']['p95_s']}s, ok={d['ok']} "
+              f"shed={d['shed']} expired={d['expired']} "
+              f"failed={d['failed']} lost={d['lost']}")
+    if args.open_rate > 0:
+        sizes = rng.integers(1, max_n + 1, 4096)
+        st = await open_loop_stage(
+            args.host, args.port, rate=args.open_rate,
+            duration_s=args.open_duration_s, sizes=sizes,
+            payloads=payloads, seed=args.seed + 1, deadline_s=deadline)
+        stages.append(st)
+        d = st.as_dict()
+        print(f"# stage {d['label']}: {d['requests']} reqs -> "
+              f"{d['kips']} KIPS, lost={d['lost']}")
+
+    _, server_stats = await http_json(args.host, args.port, "GET", "/stats")
+    if args.metrics_out:
+        _, snap = await http_json(args.host, args.port,
+                                  "GET", "/metrics.json")
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote /metrics.json scrape to {args.metrics_out}")
+    return summarize(args, stages, server_stats)
+
+
+def summarize(args, stages: List[StageStats], server_stats: dict) -> dict:
+    sent = sum(s.sent for s in stages)
+    lost_client = sum(s.lost for s in stages)
+    images_ok = sum(s.images_ok for s in stages)
+    elapsed = sum(s.elapsed_s for s in stages)
+    lats = [x for s in stages for x in s.latencies]
+    shed = sum(s.by_outcome.get("shed", 0) for s in stages)
+    totals = server_stats.get("totals", {})
+    lost_server = int(totals.get("lost_requests", 0))
+    routed = {name: row.get("routed", 0) for name, row
+              in server_stats.get("workers", {}).items()}
+    peak = max((s.kips for s in stages), default=0.0)
+    summary = {
+        "requests": sent,
+        "ok": sum(s.by_outcome.get("ok", 0) for s in stages),
+        "shed": shed,
+        "expired": sum(s.by_outcome.get("expired", 0) for s in stages),
+        "failed": sum(s.by_outcome.get("failed", 0) for s in stages),
+        "lost_requests": lost_client + lost_server,
+        "shed_rate": round(shed / sent, 4) if sent else 0.0,
+        "images_ok": images_ok,
+        "elapsed_s": round(elapsed, 4),
+        "kips": round(images_ok / elapsed / 1e3, 6) if elapsed else 0.0,
+        "peak_kips": round(peak, 6),
+        "latency": {"p50_s": round(percentile(lats, 50), 6),
+                    "p95_s": round(percentile(lats, 95), 6),
+                    "p99_s": round(percentile(lats, 99), 6)},
+        "per_worker_routed": routed,
+        "failovers": server_stats.get("failovers", 0),
+        "stages": [s.as_dict() for s in stages],
+        "workload": {"model": args.model, "backend": args.backend,
+                     "img": args.img, "width": args.width,
+                     "buckets": args.buckets, "seed": args.seed,
+                     "workers": args.workers,
+                     "deadline_s": args.deadline_s or None,
+                     "ramp": args.ramp or str(args.concurrency)},
+    }
+    return summary
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="closed+open-loop load generator for the HTTP "
+                    "serving front-end")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--requests", type=int, default=64,
+                    help="requests per closed-loop stage (raised to the "
+                         "stage concurrency if smaller)")
+    ap.add_argument("--concurrency", type=int, default=16,
+                    help="in-flight virtual users (single closed stage)")
+    ap.add_argument("--ramp", default="",
+                    help="comma-separated concurrency ramp, e.g. "
+                         "16,64,256,1024 (overrides --concurrency)")
+    ap.add_argument("--open-rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s) for an extra "
+                         "open-loop stage (0 = off)")
+    ap.add_argument("--open-duration-s", type=float, default=5.0)
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="attach this SLO to every request (0 = none)")
+    ap.add_argument("--seed", type=int, default=0)
+    # --boot: run the server ourselves (CI does this)
+    ap.add_argument("--boot", action="store_true",
+                    help="launch repro.launch.server as a subprocess "
+                         "and target it")
+    ap.add_argument("--boot-timeout-s", type=float, default=300.0)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--spawn", action="store_true")
+    ap.add_argument("--model", default="vgg16")
+    ap.add_argument("--backend", default="interpret",
+                    choices=["auto", "interpret", "reference"])
+    ap.add_argument("--img", type=int, default=32)
+    ap.add_argument("--width", type=float, default=0.0625)
+    ap.add_argument("--buckets", default="1,2,4,8")
+    ap.add_argument("--server-log", default="server_transport.log")
+    # outputs
+    ap.add_argument("--bench-json", default="BENCH_vgg.json")
+    ap.add_argument("--metrics-out", default="",
+                    help="save the /metrics.json scrape here for "
+                         "obs.report --validate-metrics")
+    args = ap.parse_args(argv)
+
+    proc = boot_server(args) if args.boot else None
+    try:
+        summary = asyncio.run(run_stages(args))
+    finally:
+        if proc is not None:
+            proc.terminate()        # SIGTERM: the clean preemption drain
+            try:
+                proc.wait(60.0)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait(10.0)
+
+    merge_bench_json(summary, args.bench_json, model=None,
+                     section="transport")
+    print(f"# transport: {summary['requests']} requests, "
+          f"{summary['kips']} KIPS sustained "
+          f"(peak {summary['peak_kips']}), "
+          f"p99={summary['latency']['p99_s']}s, "
+          f"shed_rate={summary['shed_rate']}, "
+          f"lost_requests={summary['lost_requests']}, "
+          f"balance={summary['per_worker_routed']}")
+    if summary["lost_requests"] != 0:
+        print("FATAL: zero-loss invariant violated over the wire "
+              f"(lost_requests={summary['lost_requests']})")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

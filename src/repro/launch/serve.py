@@ -63,7 +63,9 @@ def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json",
     is named — never clobbered by another model's serve.  Chaos runs pass
     ``section="chaos"`` and land under ``chaos_by_model`` only, so a
     fault-injected run can never overwrite the healthy serving numbers
-    the perf gate compares."""
+    the perf gate compares.  Model-agnostic sections (``model=None`` —
+    the transport load generator aggregates across workers) write the
+    flat ``data[section]`` directly."""
     data = {}
     if os.path.exists(path):
         try:
@@ -80,8 +82,8 @@ def merge_bench_json(summary: dict, path: str = "BENCH_vgg.json",
             by_model = {}
         by_model[model] = summary
         data[by_key] = by_model
-    if section == "serving" and (model is None or model == "vgg16"):
-        data["serving"] = summary
+    if model is None or (section == "serving" and model == "vgg16"):
+        data[section] = summary
     with open(path, "w") as f:
         json.dump(data, f, indent=2)
     key = (f"{section}_by_model.{model}" if model is not None

@@ -40,6 +40,7 @@ TID_ENGINE = 0        # engine control: stage/form/admission
 TID_DISPATCH = 1      # device dispatch + kernel + per-layer children
 TID_COMPLETE = 2      # readback/epilogue/completion
 TID_COMPILE = 3       # compile_network / schedule planning
+TID_TRANSPORT = 4     # HTTP front-end: one span per wire request
 REQ_TID0 = 1000       # request r lives on track REQ_TID0 + r
 
 

@@ -71,6 +71,9 @@ class ImageRequest:
     outcome: RequestOutcome = RequestOutcome.PENDING
     served_by: Optional[str] = None
     error: Optional[str] = None
+    # the admission controller's predicted queue wait at submit time —
+    # the transport layer surfaces it as a 429 Retry-After on shed
+    predicted_wait_s: Optional[float] = None
 
     @property
     def n(self) -> int:

@@ -289,6 +289,7 @@ class VisionEngine:
         adm = tr.begin("admit", tid=TID_ENGINE)
         ok, predicted = self.admission.admit(
             req.n, self.batcher.pending_images, deadline_s)
+        req.predicted_wait_s = predicted
         tr.end(adm, admitted=ok, predicted_wait_s=predicted)
         if not ok:
             req.finish(RequestOutcome.REJECTED,
@@ -607,16 +608,27 @@ class VisionEngine:
         d["observability"] = self.folds.as_dict()
         return d
 
-    def snapshot_registry(self, registry: Optional[MetricsRegistry] = None
+    def snapshot_registry(self, registry: Optional[MetricsRegistry] = None,
+                          labels: Optional[Dict[str, str]] = None
                           ) -> MetricsRegistry:
         """Sync every serving counter into a metrics registry
         (``obs/metrics.py``) — one snapshot carrying perf + robustness +
         fold-reuse + chaos health.  Sync happens here, at snapshot time,
-        so the serving hot path never touches the registry."""
+        so the serving hot path never touches the registry.
+
+        ``labels`` (e.g. ``{"worker": "w0"}``) is stamped onto every
+        synced series, so several engines — the HTTP router's worker
+        pool — can share one registry without clobbering each other."""
         reg = registry if registry is not None else \
             (self.registry or MetricsRegistry())
+        lb = dict(labels or {})
         m = self.metrics
-        c = reg.counter
+
+        def c(name: str, help_: str = "", **kw):
+            return reg.counter(name, help_, **lb, **kw)
+
+        def g(name: str, help_: str = "", **kw):
+            return reg.gauge(name, help_, **lb, **kw)
         c("serve_requests_submitted_total",
           "Requests entering the engine (any fate)").set_total(m.submitted)
         for outcome, n in sorted(m.outcomes.items()):
@@ -635,7 +647,6 @@ class VisionEngine:
                             ("deadline_total", "Terminal with an SLO"),
                             ("deadline_hits", "SLO met")):
             c(f"serve_{name}_total", help_).set_total(getattr(m, name))
-        g = reg.gauge
         g("serve_kips", "Measured kilo-images per second").set(m.kips)
         g("serve_deadline_hit_rate", "SLO hit fraction"
           ).set(m.deadline_hit_rate)
@@ -648,9 +659,9 @@ class VisionEngine:
           ).set_total(cs.replans)
         g("schedule_cache_hit_rate", "Fold-reuse rate").set(cs.hit_rate)
         reg.register_histogram("serve_latency_seconds", m.latency_hist,
-                               "End-to-end request latency")
+                               "End-to-end request latency", **lb)
         reg.register_histogram("serve_slot_occupancy", m.occupancy_hist,
-                               "Real rows / bucket width per batch")
+                               "Real rows / bucket width per batch", **lb)
         if self.chaos is not None:
             for kind, n in sorted(self.chaos.injected.items()):
                 c("chaos_injected_total", "Faults fired by the injector",

@@ -404,7 +404,7 @@ def test_bench_gate_validates_baseline_schema():
            "latency": {"serving.vgg16.p95_s": -0.1},
            "extra_section": {}}
     problems = validate_baseline(bad)
-    assert len(problems) == 8
+    assert len(problems) == 9
     text = "\n".join(problems)
     assert "not an integral count" in text          # 13.5
     assert "not a number" in text                   # "five"
@@ -413,6 +413,7 @@ def test_bench_gate_validates_baseline_schema():
     assert "missing section 'robustness'" in text
     assert "missing section 'observability'" in text
     assert "missing section 'quantization'" in text
+    assert "missing section 'transport'" in text
     assert "unknown section 'extra_section'" in text
     assert validate_baseline([1, 2]) \
         == ["baseline must be a JSON object, got list"]
